@@ -1,0 +1,141 @@
+"""Shared benchmark harness: trains (and caches) the paper-faithful mini
+CNN and a tiny LM on synthetic tasks, provides quantized-accuracy eval.
+
+All tables report RELATIVE top-1 degradation vs the FP32 model, mirroring
+the paper's presentation. Absolute numbers differ from ImageNet (synthetic
+task, small model — DESIGN.md §7); the claims under test are the paper's
+orderings: 5opt>=3opt>=2opt, +R>=-R, +vS>=-vS, 4b>3b>2b, SPARQ >> naive
+A4W8 / plain trim baselines.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparq import SparqConfig
+from repro.models import cnn
+from repro.models.common import QuantCtx
+
+CACHE = os.path.join(os.path.dirname(__file__), ".cache")
+SEED = 42
+N_EVAL = 3072
+N_CALIB = 256          # "2K randomly picked images" scaled to task size
+TRAIN_STEPS = 420
+BATCH = 96
+
+
+def _cache_path(tag):
+    os.makedirs(CACHE, exist_ok=True)
+    return os.path.join(CACHE, tag + ".npz")
+
+
+def train_cnn(cfg: Optional[cnn.CNNConfig] = None, tag="cnn",
+              steps=None, prune_2_4: bool = False) -> Dict:
+    """Train (or load cached) mini-ResNet; optionally with 2:4 pruning
+    (paper §5.3: prune from pretrained, retrain)."""
+    # 2:4 recovery needs a longer masked-retraining phase (paper: 90 ep)
+    steps = steps or (3 * TRAIN_STEPS // 2 if prune_2_4 else TRAIN_STEPS)
+    cfg = cfg or cnn.CNNConfig(width=24, stages=(1, 1, 1), num_classes=8,
+                               img_size=24)
+    path = _cache_path(tag)
+    params = cnn.init_params(jax.random.PRNGKey(SEED), cfg)
+    if os.path.exists(path):
+        flat = dict(np.load(path))
+        leaves, tdef = jax.tree_util.tree_flatten(params)
+        params = jax.tree_util.tree_unflatten(
+            tdef, [jnp.asarray(flat[str(i)]) for i in range(len(leaves))])
+        return {"cfg": cfg, "params": params}
+
+    from repro.core.pruning import prune_2_4 as prune_fn
+    from repro.optim.adamw import AdamW, cosine_schedule
+    opt = AdamW(lr=cosine_schedule(3e-3, 20, steps), weight_decay=1e-4)
+    state = opt.init(params)
+
+    def apply_prune(p):
+        def prune_leaf(path, leaf):
+            name = str(path[-1])
+            if leaf.ndim == 4 and "stem" not in str(path):
+                w2 = leaf.reshape(-1, leaf.shape[-1])
+                return prune_fn(w2, axis=0).reshape(leaf.shape)
+            return leaf
+        return jax.tree_util.tree_map_with_path(prune_leaf, p)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: cnn.loss_fn(p, batch, cfg))(params)
+        params, state, _ = opt.update(grads, state, params)
+        return params, state, loss
+
+    for i in range(steps):
+        batch = cnn.synthetic_dataset(
+            jax.random.fold_in(jax.random.PRNGKey(SEED + 1), i), cfg, BATCH)
+        params, state, loss = step(params, state, batch)
+        if prune_2_4 and i >= steps // 4:   # prune, then keep training
+            params = apply_prune(params)
+    if prune_2_4:
+        params = apply_prune(params)
+
+    leaves = jax.tree_util.tree_flatten(params)[0]
+    np.savez(path, **{str(i): np.asarray(l) for i, l in enumerate(leaves)})
+    return {"cfg": cfg, "params": params}
+
+
+def eval_batches(cfg, n=N_EVAL, batch=256, seed=SEED + 7):
+    out = []
+    for i in range(n // batch):
+        out.append(cnn.synthetic_dataset(
+            jax.random.fold_in(jax.random.PRNGKey(seed), i), cfg, batch))
+    return out
+
+
+def calib_batches(cfg, n=N_CALIB, batch=128, seed=SEED + 13):
+    return eval_batches(cfg, n=n, batch=batch, seed=seed)
+
+
+def calibrate_cnn(model: Dict) -> Dict[str, float]:
+    """min-max activation calibration + BN recalibration (paper §5)."""
+    from repro.core.calibration import CalibBank
+    cfg, params = model["cfg"], model["params"]
+    params = cnn.recalibrate_bn(params, calib_batches(cfg, 128), cfg)
+    model["params"] = params
+    bank = CalibBank()
+    ctx = QuantCtx(mode="calibrate", collect=bank)
+    for b in calib_batches(cfg, 128):
+        cnn.forward(params, b["image"], cfg, ctx=ctx, train=False)
+    return {k: float(o.max_val) for k, o in bank.observers.items()}
+
+
+def cnn_accuracy(model: Dict, ctx: Optional[QuantCtx] = None,
+                 n=N_EVAL, batch=256) -> float:
+    cfg, params = model["cfg"], model["params"]
+    fn = jax.jit(lambda p, b: cnn.accuracy(p, b, cfg, ctx=ctx))
+    accs = [float(fn(params, b)) for b in eval_batches(cfg, n, batch=batch)]
+    return float(np.mean(accs))
+
+
+def quant_ctx(scales: Dict[str, float], cfg: SparqConfig,
+              stc: bool = False) -> QuantCtx:
+    return QuantCtx(mode="quantized", cfg=cfg,
+                    scales={k: jnp.float32(v) for k, v in scales.items()},
+                    impl="reference", stc=stc)
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def emit(table: str, rows):
+    """CSV rows: table,config,metric,value."""
+    for config, metric, value in rows:
+        print(f"{table},{config},{metric},{value}")

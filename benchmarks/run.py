@@ -1,0 +1,61 @@
+"""Benchmark entry point: one function per paper table, CSV to stdout.
+
+  PYTHONPATH=src python -m benchmarks.run [--tables 1,2,3,4,5,6,stats]
+
+Output rows: table,config,metric,value
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default="1,2,3,4,5,6,stats,serve")
+    args = ap.parse_args()
+    want = set(args.tables.split(","))
+
+    from benchmarks import common, tables
+
+    t0 = time.time()
+    print("table,config,metric,value")
+    model = common.train_cnn()
+    scales = common.calibrate_cnn(model)
+
+    if "1" in want:
+        common.emit("table1", tables.table1_precision_grid(model, scales))
+    if "2" in want:
+        common.emit("table2", tables.table2_sparq_configs(model, scales))
+    if "3" in want:
+        common.emit("table3", tables.table3_baselines(model, scales))
+    if "4" in want:
+        common.emit("table4", tables.table4_low_bits(model, scales))
+    if "5" in want:
+        from benchmarks.table5_hw_cost import table5_rows
+        common.emit("table5", table5_rows())
+    if "6" in want:
+        pruned = common.train_cnn(tag="cnn_2_4", prune_2_4=True)
+        pscales = common.calibrate_cnn(pruned)
+        common.emit("table6", tables.table6_sparse_tc(pruned, pscales))
+    if "stats" in want:
+        common.emit("bit_stats", tables.bit_stats(model))
+    if "serve" in want:
+        # end-to-end serving microbench on the tiny LM (tok/s, SPARQ on/off)
+        from repro.launch import serve as serve_mod
+        for preset in ("off", "a8w8", "5opt"):
+            stats = serve_mod.main([
+                "--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
+                "--prompt-len", "32", "--gen", "8", "--sparq", preset,
+                "--calibrate", "1"])
+            common.emit("serve", [
+                (f"tinyllama_reduced_{preset}", "decode_tok_s",
+                 round(stats["decode_tok_s"], 2)),
+                (f"tinyllama_reduced_{preset}", "prefill_us",
+                 round(stats["prefill_s"] * 1e6, 0))])
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Paper-table benchmarks (one function per table/figure) on the trained
+mini-CNN. Each returns rows [(config, metric, value)] and asserts nothing —
+assertions live in tests/test_paper_claims.py; run.py prints the CSV."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.sparq import SparqConfig
+from repro.core.aciq import aciq_fake_quant
+
+
+def _deltas(model, scales, configs, stc=False, fp32=None):
+    fp32 = fp32 if fp32 is not None else common.cnn_accuracy(model)
+    rows = [("fp32", "top1", round(fp32, 4))]
+    for name, cfg in configs:
+        acc = common.cnn_accuracy(model, common.quant_ctx(scales, cfg,
+                                                          stc=stc))
+        rows.append((name, "top1_delta", round(acc - fp32, 4)))
+    return rows
+
+
+def table1_precision_grid(model, scales):
+    """Table 1: FP32 / A8W8 / A4W8 / A8W4 (uniform min-max, no SPARQ)."""
+    configs = [
+        ("a8w8", SparqConfig(enabled=False, act_bits=8, weight_bits=8)),
+        ("a4w8", SparqConfig(enabled=False, act_bits=4, weight_bits=8)),
+        ("a8w4", SparqConfig(enabled=False, act_bits=8, weight_bits=4)),
+    ]
+    return _deltas(model, scales, configs)
+
+
+def table2_sparq_configs(model, scales):
+    """Table 2: 5/3/2opt x {trim, +R, +R-vS}."""
+    configs = []
+    for opts in (5, 3, 2):
+        configs += [
+            (f"{opts}opt_trim", SparqConfig(bits=4, opts=opts,
+                                            rounding=False, vsparq=True)),
+            (f"{opts}opt_R", SparqConfig(bits=4, opts=opts,
+                                         rounding=True, vsparq=True)),
+            (f"{opts}opt_R_noVS", SparqConfig(bits=4, opts=opts,
+                                              rounding=True, vsparq=False)),
+        ]
+    return _deltas(model, scales, configs)
+
+
+def table3_baselines(model, scales):
+    """Table 3: SPARQ vs other 4-bit PTQ schemes. SySMT == our 2opt; ACIQ ==
+    analytic Laplace clip at 4 bits (per-tensor, dynamic); naive = min-max
+    A4W8 (from Table 1)."""
+    rows = _deltas(model, scales, [
+        ("sparq_5opt", SparqConfig.opt5()),
+        ("sparq_3opt", SparqConfig.opt3()),
+        ("sparq_2opt_sysmt", SparqConfig.opt2()),
+        ("minmax_a4w8", SparqConfig(enabled=False, act_bits=4)),
+    ])
+    # ACIQ baseline: clip-based 4-bit activations (dynamic per batch)
+    import dataclasses
+    import jax
+    from repro.models import cnn
+    fp32 = [r for r in rows if r[0] == "fp32"][0][2]
+    cfg, params = model["cfg"], model["params"]
+    accs = []
+    for b in common.eval_batches(cfg):
+        # fake-quant activations with ACIQ clip by monkey layer: easiest
+        # honest proxy — quantize the *input image path* activations via
+        # a quantized ctx whose scales are ACIQ clips from this batch.
+        accs.append(float(cnn.accuracy(params, b, cfg, ctx=common.quant_ctx(
+            {k: v for k, v in _aciq_scales(model, bits=4).items()},
+            SparqConfig(enabled=False, act_bits=4)))))
+    rows.append(("aciq_a4w8", "top1_delta", round(float(np.mean(accs)) - fp32, 4)))
+    return rows
+
+
+def _aciq_scales(model, bits):
+    """Calibration pass that records ACIQ-Laplace clip values per site."""
+    from repro.core.calibration import CalibBank
+    from repro.core.quantizer import MinMaxObserver
+    from repro.models import cnn
+    from repro.models.common import QuantCtx
+    import jax
+
+    cfg, params = model["cfg"], model["params"]
+
+    class ACIQBank(CalibBank):
+        def observe(self, name, x):
+            from repro.core.aciq import aciq_clip_laplace
+            clip = float(aciq_clip_laplace(x, bits))
+            obs = self.observers.get(name, MinMaxObserver())
+            self.observers[name] = MinMaxObserver(
+                max(obs.max_val, clip), 0.0, obs.count + 1)
+
+    bank = ACIQBank()
+    ctx = QuantCtx(mode="calibrate", collect=bank)
+    for b in common.calib_batches(cfg, 128):
+        cnn.forward(params, b["image"], cfg, ctx=ctx, train=False)
+    return {k: o.max_val for k, o in bank.observers.items()}
+
+
+def table4_low_bits(model, scales):
+    """Table 4: 3-bit (6opt) and 2-bit (7opt), with and without vSPARQ."""
+    configs = [
+        ("3b_6opt", SparqConfig.opt6()),
+        ("2b_7opt", SparqConfig.opt7()),
+        ("3b_6opt_noVS", SparqConfig.opt6(vsparq=False)),
+        ("2b_7opt_noVS", SparqConfig.opt7(vsparq=False)),
+    ]
+    return _deltas(model, scales, configs)
+
+
+def table6_sparse_tc(pruned_model, scales):
+    """Table 6: SPARQ on an STC with a 2:4-pruned model."""
+    configs = [
+        ("stc_a8w8", SparqConfig(enabled=False)),
+        ("stc_4b_5opt", SparqConfig.opt5()),
+        ("stc_4b_3opt", SparqConfig.opt3()),
+        ("stc_4b_2opt", SparqConfig.opt2()),
+        ("stc_3b_6opt", SparqConfig.opt6()),
+        ("stc_2b_7opt", SparqConfig.opt7()),
+    ]
+    # the STC sim reconstructs per *output channel* (paper §5.3) — ~30x
+    # the plain eval cost on CPU, so Table 6 uses one 256-sample batch
+    fp32 = common.cnn_accuracy(pruned_model, n=256)
+    rows = [("stc_fp32_pruned", "top1", round(fp32, 4))]
+    for name, cfg in configs:
+        stc = cfg.enabled  # A8W8 reference runs the plain path
+        acc = common.cnn_accuracy(
+            pruned_model, common.quant_ctx(scales, cfg, stc=stc), n=256)
+        rows.append((name, "top1_delta", round(acc - fp32, 4)))
+    return rows
+
+
+def bit_stats(model):
+    """§2/§5.1 analysis: per-bit toggle rates of non-zero activations and
+    the MSB-window coverage statistic (67% claim analogue)."""
+    from repro.core.calibration import CalibBank
+    from repro.core.quantizer import MinMaxObserver, act_scale_from_stats, quantize
+    from repro.models import cnn
+    from repro.models.common import QuantCtx
+    import jax
+
+    cfg, params = model["cfg"], model["params"]
+    acts = []
+
+    class Tap(CalibBank):
+        def observe(self, name, x):
+            acts.append(np.asarray(x).ravel())
+
+    ctx = QuantCtx(mode="calibrate", collect=Tap())
+    b = common.eval_batches(cfg, n=256)[0]
+    cnn.forward(params, b["image"], cfg, ctx=ctx, train=False)
+    x = np.concatenate(acts)
+    qs = act_scale_from_stats(float(x.max()), bits=8, signed=False)
+    q = np.asarray(quantize(jnp.asarray(x), qs))
+    nz = q[q > 0]
+    rows = [("zero_fraction", "rate", round(float((q == 0).mean()), 4))]
+    for bit in (7, 6, 5, 4):
+        rows.append((f"bit{bit}_toggle_nonzero", "rate",
+                     round(float(((nz >> bit) & 1).mean()), 4)))
+    msb_high = float((nz >= 16).mean())  # any of bits [7:4] toggled
+    rows.append(("msb_window_needed", "rate", round(msb_high, 4)))
+    return rows

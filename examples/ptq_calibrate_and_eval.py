@@ -1,0 +1,31 @@
+"""End-to-end PTQ driver (the paper's workflow, §5):
+train FP32 -> calibrate (min-max + BN recalibration) -> PTQ with SPARQ ->
+report the accuracy-degradation table.
+
+  PYTHONPATH=src:. python examples/ptq_calibrate_and_eval.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common
+from repro.core.sparq import SparqConfig
+
+print("training mini-ResNet on the synthetic task (cached after first run)")
+model = common.train_cnn()
+print("calibrating (min-max activation stats + BN recalibration)")
+scales = common.calibrate_cnn(model)
+
+fp32 = common.cnn_accuracy(model)
+print(f"\nFP32 top-1: {fp32:.4f}\n")
+print(f"{'config':24s} {'top-1 delta':>12s}")
+for name, cfg in [
+    ("A8W8", SparqConfig(enabled=False)),
+    ("SPARQ 4b 5opt", SparqConfig.opt5()),
+    ("SPARQ 4b 3opt", SparqConfig.opt3()),
+    ("SPARQ 4b 2opt (SySMT)", SparqConfig.opt2()),
+    ("SPARQ 3b 6opt", SparqConfig.opt6()),
+    ("SPARQ 2b 7opt", SparqConfig.opt7()),
+    ("static A4W8", SparqConfig(enabled=False, act_bits=4)),
+]:
+    acc = common.cnn_accuracy(model, common.quant_ctx(scales, cfg))
+    print(f"{name:24s} {acc - fp32:+12.4f}")

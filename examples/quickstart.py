@@ -1,0 +1,36 @@
+"""Quickstart: SPARQ in 30 lines — quantize a matmul's activations
+dynamically to 4 bits and compare against FP32 and plain A4W8.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SparqConfig, act_scale_from_stats, fake_quant,
+                        quantize_weight, sparq_dot)
+
+key = jax.random.PRNGKey(0)
+# post-ReLU activations: bell-shaped, ~50% zeros (the paper's setting)
+x = jnp.maximum(jax.random.normal(key, (64, 512)) - 0.2, 0.0)
+w = jax.random.normal(jax.random.PRNGKey(1), (512, 128)) / 512 ** 0.5
+
+y_fp32 = x @ w
+
+w_codes, w_qs = quantize_weight(w, bits=8)
+act_qs = act_scale_from_stats(float(x.max()), bits=8, signed=False)
+
+def err(y):
+    return float(jnp.linalg.norm(y - y_fp32) / jnp.linalg.norm(y_fp32))
+
+# SPARQ 4-bit (5opt, rounding, vSPARQ) on top of A8W8
+y_sparq = sparq_dot(x, w_codes, act_qs, w_qs, SparqConfig.opt5())
+# plain static 4-bit activations
+qs4 = act_scale_from_stats(float(x.max()), bits=4, signed=False)
+y_a4w8 = fake_quant(x, qs4) @ (w_codes * w_qs.scale)
+
+print(f"relative error vs FP32:")
+print(f"  A8W8 + SPARQ 4b (5opt) : {err(y_sparq):.4%}")
+print(f"  static A4W8            : {err(y_a4w8):.4%}")
+print("SPARQ's dynamic windowing recovers most of the 8-bit accuracy "
+      "at a 4-bit budget.")

@@ -1,0 +1,17 @@
+"""Batched serving with SPARQ-quantized matmuls: prefill a batch of
+synthetic prompts, decode greedily, compare SPARQ presets.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch rwkv6-7b]
+"""
+import argparse
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    args = ap.parse_args()
+    for preset in ("off", "a8w8", "5opt", "2opt"):
+        print(f"--- sparq={preset} ---")
+        serve.main(["--arch", args.arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "48", "--gen", "16", "--sparq", preset])

@@ -1,0 +1,63 @@
+"""End-to-end training driver: train a reduced LM for a few hundred steps
+with checkpoint/restart, then PTQ-evaluate perplexity deltas with SPARQ.
+
+  PYTHONPATH=src python examples/train_tiny_lm.py [--arch tinyllama-1.1b]
+"""
+import argparse
+import math
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_reduced_config
+from repro.core.sparq import SparqConfig
+from repro.data.pipeline import Batcher, DataConfig
+from repro.launch import train as train_mod
+from repro.models.common import QuantCtx
+from repro.models.model import Model
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="tiny_lm_")
+    losses = train_mod.main([
+        "--arch", args.arch, "--reduced", "--steps", str(args.steps),
+        "--batch", "16", "--seq", "128", "--lr", "1e-3",
+        "--checkpoint-dir", ckpt_dir, "--checkpoint-every", "100"])
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(ckpts in {ckpt_dir})")
+
+    # PTQ eval: loss deltas under SPARQ (signed mode for transformer acts)
+    cfg = get_reduced_config(args.arch)
+    model = Model(cfg)
+    from repro.checkpoint import manager as ckpt
+    step = ckpt.latest_step(ckpt_dir)
+    params = model.init_params(jax.random.PRNGKey(0))
+    state = ckpt.restore(ckpt_dir, step, {"params": params})
+    params = state["params"]
+
+    data = Batcher(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                              global_batch=16))
+    batches = [data.global_batch(10_000 + i) for i in range(4)]
+    scales = model.calibrate(params, data.calib_batches(2, batch=8))
+
+    def eval_loss(ctx, scales_groups=None):
+        tot = 0.0
+        for b in batches:
+            l, _ = model.loss(params, b, ctx, scales_groups)
+            tot += float(l)
+        return tot / len(batches)
+
+    base = eval_loss(None)
+    print(f"\n{'config':18s} {'loss':>8s} {'ppl delta':>10s}")
+    print(f"{'fp32':18s} {base:8.4f} {'-':>10s}")
+    for name, scfg in [("a8w8", SparqConfig(enabled=False, signed=True)),
+                       ("sparq-4b-5opt", SparqConfig.opt5(signed=True)),
+                       ("sparq-4b-2opt", SparqConfig.opt2(signed=True))]:
+        ctx = QuantCtx(mode="quantized", cfg=scfg)
+        l = eval_loss(ctx, scales)
+        print(f"{name:18s} {l:8.4f} {math.exp(l) - math.exp(base):+10.4f}")

@@ -1,0 +1,2 @@
+"""repro: SPARQ (NeurIPS 2021) as a production multi-pod JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,8 @@
+"""Architecture configs: one module per assigned architecture."""
+from repro.configs.base import (ARCHS, SHAPES, SUBQUADRATIC, ShapeSpec,
+                                cell_is_runnable, get_config,
+                                get_reduced_config, input_specs)
+
+__all__ = ["ARCHS", "SHAPES", "SUBQUADRATIC", "ShapeSpec",
+           "cell_is_runnable", "get_config", "get_reduced_config",
+           "input_specs"]

@@ -1,0 +1,106 @@
+"""Config registry + assigned input shapes + ShapeDtypeStruct input specs.
+
+Each architecture module registers its exact published config; smoke tests
+instantiate `reduced()` variants. The four assigned LM shapes:
+
+  train_4k     seq=4096   global_batch=256   (training, train_step)
+  prefill_32k  seq=32768  global_batch=32    (inference prefill)
+  decode_32k   seq=32768  global_batch=128   (one token, 32k KV cache)
+  long_500k    seq=524288 global_batch=1     (one token, 500k state) —
+               runs only for sub-quadratic archs (rwkv6, recurrentgemma);
+               skipped for pure full-attention archs per DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs for which long_500k is runnable (sub-quadratic sequence mixing)
+SUBQUADRATIC = ("rwkv6-7b", "recurrentgemma-9b")
+
+_REGISTRY: Dict[str, str] = {
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "granite-20b": "repro.configs.granite_20b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "whisper-base": "repro.configs.whisper_base",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "paper-resnet": "repro.configs.paper_resnet",  # paper's own family
+}
+
+ARCHS = tuple(k for k in _REGISTRY if k != "paper-resnet")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(_REGISTRY[name])
+    return mod.config()
+
+
+def get_reduced_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(_REGISTRY[name])
+    return mod.reduced()
+
+
+def cell_is_runnable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch x shape) dry-run cell."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("full-attention arch: 512k dense KV cache exceeds HBM "
+                       "and published context; see DESIGN.md §4")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                batch_override: Optional[int] = None) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a step —
+    weak-type-correct, shardable, no device allocation (dry-run contract)."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    tok = lambda *s: jax.ShapeDtypeStruct(s, i32)
+    emb = lambda *s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            P = cfg.frontend_len
+            return {"image_embeds": emb(B, P, cfg.d_model),
+                    "tokens": tok(B, S - P), "labels": tok(B, S - P)}
+        if cfg.is_encdec:
+            return {"frames": emb(B, S, cfg.d_model),
+                    "tokens": tok(B, S), "labels": tok(B, S)}
+        return {"tokens": tok(B, S), "labels": tok(B, S)}
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            P = cfg.frontend_len
+            return {"image_embeds": emb(B, P, cfg.d_model),
+                    "tokens": tok(B, S - P)}
+        if cfg.is_encdec:
+            return {"frames": emb(B, S, cfg.d_model), "tokens": tok(B, S)}
+        return {"tokens": tok(B, S)}
+    # decode: one new token against a cache of S tokens
+    return {"tokens": tok(B, 1)}

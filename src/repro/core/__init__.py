@@ -1,0 +1,20 @@
+"""SPARQ core: the paper's contribution as composable JAX modules."""
+from repro.core.bsparq import bsparq_encode, bsparq_recon, bsparq_recon_signed, shifts_for
+from repro.core.vsparq import vsparq_recon, vsparq_recon_signed, vsparq_recon_grouped
+from repro.core.sparq import SparqConfig, sparq_dot, sparq_fake_quant, sparq_linear, sparq_recon_int
+from repro.core.quantizer import (
+    QScale, MinMaxObserver, act_scale_from_stats, weight_scale, quantize,
+    dequantize, fake_quant, quantize_weight)
+from repro.core.aciq import aciq_fake_quant, aciq_act_scale
+from repro.core.pruning import prune_2_4, keep_indices, sparsity
+from repro.core.calibration import CalibBank, calibrate
+
+__all__ = [
+    "SparqConfig", "sparq_dot", "sparq_fake_quant", "sparq_linear",
+    "sparq_recon_int", "bsparq_encode", "bsparq_recon", "bsparq_recon_signed",
+    "shifts_for", "vsparq_recon", "vsparq_recon_signed", "vsparq_recon_grouped",
+    "QScale", "MinMaxObserver", "act_scale_from_stats", "weight_scale",
+    "quantize", "dequantize", "fake_quant", "quantize_weight",
+    "aciq_fake_quant", "aciq_act_scale", "prune_2_4", "keep_indices",
+    "sparsity", "CalibBank", "calibrate",
+]

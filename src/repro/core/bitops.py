@@ -1,0 +1,40 @@
+"""Integer bit-level helpers used by bSPARQ.
+
+All functions operate on int32 JAX arrays holding small non-negative integers
+(magnitudes after symmetric quantization, i.e. values in [0, 255]).
+They are pure jnp, shape-polymorphic, and jit-safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def msb_pos(x: jnp.ndarray) -> jnp.ndarray:
+    """Position (0-indexed) of the most-significant toggled bit.
+
+    floor(log2(x)) for x >= 1, and 0 for x == 0 (callers treat x==0 as
+    "no window shift needed"; the reconstruction of 0 is 0 regardless).
+    Exact integer computation — no float log.
+    """
+    x = x.astype(jnp.int32)
+    m = jnp.zeros_like(x)
+    for k in range(1, 8):  # values are < 2**8
+        m = m + (x >= (1 << k)).astype(jnp.int32)
+    return m
+
+
+def select_shift(m: jnp.ndarray, n_bits: int, shifts: tuple[int, ...]) -> jnp.ndarray:
+    """Smallest allowed shift s in `shifts` such that the n-bit window
+    [s+n-1 : s] covers bit position `m` (the paper's trim rule: the window is
+    placed at the first most-significant toggled bit, restricted to the
+    placement options of the configuration).
+
+    `shifts` is a static, ascending tuple, e.g. (0,1,2,3,4) for 5opt,
+    (0,2,4) for 3opt, (0,4) for 2opt. If m exceeds every window (cannot
+    happen for in-range values), the max shift is used.
+    """
+    need = jnp.maximum(m - (n_bits - 1), 0)  # minimal shift that still covers m
+    s = jnp.full_like(m, shifts[-1])
+    for opt in reversed(shifts[:-1]):
+        s = jnp.where(need <= opt, opt, s)
+    return s

@@ -1,0 +1,93 @@
+"""bSPARQ: bit-level sparsity-aware dynamic quantization (paper §3.1).
+
+An already-quantized integer value (8-bit unsigned in the paper; 7-bit
+magnitude in our signed extension) is trimmed to `n_bits` by selecting the
+most-significant consecutive n-bit window, skipping leading zero bits.
+Optionally the value inside the window is rounded to nearest using the
+residual LSBs (+R), with exact carry handling (a carry that overflows the
+window re-encodes at the next window position; values beyond the
+representable range saturate).
+
+All functions are pure jnp over int32 arrays and are used both by the
+reference (fake-quant) path and as the oracle for the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bitops import msb_pos, select_shift
+
+
+def shifts_for(n_bits: int, opts: int) -> tuple[int, ...]:
+    """Window placement (shift-left) options for a configuration.
+
+    Full sets: n=4 -> 5opt = (0..4); n=3 -> 6opt = (0..5); n=2 -> 7opt = (0..6).
+    Reduced sets (paper §3.1): 3opt = (0,2,4); 2opt = (0,4).
+    """
+    full = 8 - n_bits + 1
+    if opts == full:
+        return tuple(range(full))
+    if n_bits == 4 and opts == 3:
+        return (0, 2, 4)
+    if n_bits == 4 and opts == 2:
+        return (0, 4)
+    raise ValueError(f"unsupported (n_bits={n_bits}, opts={opts})")
+
+
+def _trim(x: jnp.ndarray, n_bits: int, shifts: tuple[int, ...]):
+    """Trim-only window selection. Returns (q, s): window value and shift."""
+    m = msb_pos(x)
+    s = select_shift(m, n_bits, shifts)
+    q = jnp.right_shift(x, s) & ((1 << n_bits) - 1)
+    return q, s
+
+
+def bsparq_encode(
+    x: jnp.ndarray, n_bits: int, shifts: tuple[int, ...], rounding: bool,
+    max_val: int = 255,
+):
+    """Encode non-negative int32 values into (window value q, shift s).
+
+    Reconstruction is ``q << s``. With rounding, the residual LSB below the
+    window rounds q to nearest; a carry out of the window (q == 2**n) is
+    re-encoded exactly at a higher window position when one exists, else the
+    value saturates at the largest representable code.
+    """
+    x = x.astype(jnp.int32)
+    q, s = _trim(x, n_bits, shifts)
+    if not rounding:
+        return q, s
+    rbit = jnp.where(s > 0, jnp.right_shift(x, jnp.maximum(s - 1, 0)) & 1, 0)
+    q = q + rbit
+    v = jnp.left_shift(q, s)
+    # Carry handling: q == 2**n makes v a single toggled bit at position n+s,
+    # which the trim rule re-encodes exactly when in range; clamping to
+    # max_val first makes out-of-range carries saturate at the largest
+    # representable code (trim(255) -> 240, trim(127) -> 120). For values
+    # without carry the re-encode is an exact identity, so we apply it
+    # unconditionally — branch-free, kernel-friendly.
+    v = jnp.minimum(v, max_val)
+    return _trim(v, n_bits, shifts)
+
+
+def bsparq_recon(
+    x: jnp.ndarray, n_bits: int, shifts: tuple[int, ...], rounding: bool,
+    max_val: int = 255,
+) -> jnp.ndarray:
+    """Fake-quant reconstruction: encode then decode (q << s). int32 -> int32."""
+    q, s = bsparq_encode(x, n_bits, shifts, rounding, max_val)
+    return jnp.left_shift(q, s)
+
+
+def bsparq_recon_signed(
+    x: jnp.ndarray, n_bits: int, shifts: tuple[int, ...], rounding: bool,
+    max_val: int = 127,
+) -> jnp.ndarray:
+    """Signed extension (beyond paper, DESIGN.md §3.5): sign-magnitude.
+
+    bSPARQ windows the magnitude; the sign rides along as one metadata bit.
+    Input values in [-max_val, max_val].
+    """
+    sign = jnp.sign(x).astype(jnp.int32)
+    mag = jnp.abs(x).astype(jnp.int32)
+    return sign * bsparq_recon(mag, n_bits, shifts, rounding, max_val)

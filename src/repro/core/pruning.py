@@ -1,0 +1,38 @@
+"""2:4 structured weight pruning (paper §5.3, NVIDIA Sparse Tensor Cores).
+
+Every group of 4 adjacent weights along the reduction axis keeps its 2
+largest-magnitude members. `keep_indices` produces the coordinates the STC
+stores; `vsparq_recon_grouped` (core.vsparq) consumes them to pair the two
+surviving activations per group, exactly the paper's Figure 5 dataflow.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def prune_2_4(w: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Zero the 2 smallest-|w| of every 4 adjacent weights along `axis`."""
+    w_m = jnp.moveaxis(w, axis, -1)
+    if w_m.shape[-1] % 4 != 0:
+        raise ValueError(f"axis length must be divisible by 4: {w_m.shape[-1]}")
+    g = w_m.reshape(*w_m.shape[:-1], -1, 4)
+    # rank within each group: keep top-2 by |w|
+    order = jnp.argsort(jnp.abs(g), axis=-1)  # ascending
+    ranks = jnp.argsort(order, axis=-1)
+    mask = ranks >= 2
+    pruned = jnp.where(mask, g, 0.0).reshape(w_m.shape)
+    return jnp.moveaxis(pruned, -1, axis)
+
+
+def keep_indices(w: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Per group of 4 along `axis`, ascending positions (0..3) of the 2 kept
+    weights — the STC's stored coordinates. Shape [..., K/4, 2] with the
+    grouped axis moved last."""
+    w_m = jnp.moveaxis(w, axis, -1)
+    g = w_m.reshape(*w_m.shape[:-1], -1, 4)
+    top2 = jnp.argsort(-jnp.abs(g), axis=-1)[..., :2]
+    return jnp.sort(top2, axis=-1)
+
+
+def sparsity(w: jnp.ndarray) -> float:
+    return float(jnp.mean(w == 0.0))

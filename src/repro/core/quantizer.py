@@ -1,0 +1,96 @@
+"""Uniform min-max symmetric PTQ (paper §5 baseline quantizer).
+
+Activations: per-tensor ("per-layer") symmetric. The paper uses *unsigned*
+activations (post-ReLU CNNs); transformers need the signed variant
+(DESIGN.md §3.5). Weights: per-output-channel ("per-kernel") symmetric signed.
+Scales are plain floats/arrays carried in a small pytree so they shard and
+checkpoint like any other state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QScale:
+    """Quantization scale(s): x_int = clip(round(x / scale)). For unsigned
+    tensors the integer range is [0, 2**bits - 1]; for signed,
+    [-(2**(bits-1) - 1), 2**(bits-1) - 1] (symmetric, no -128)."""
+    scale: jnp.ndarray  # scalar (per-tensor) or [out_features] (per-channel)
+    bits: int
+    signed: bool
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -self.qmax if self.signed else 0
+
+
+def act_scale_from_stats(max_val: jnp.ndarray, bits: int = 8,
+                         signed: bool = False) -> QScale:
+    """Per-tensor activation scale from calibrated max statistic.
+
+    Unsigned (paper): scale = max / (2^bits - 1). Signed: max|x| / (2^(b-1)-1).
+    """
+    qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    scale = jnp.maximum(jnp.asarray(max_val, jnp.float32), 1e-8) / qmax
+    return QScale(scale=scale, bits=bits, signed=signed)
+
+
+def weight_scale(w: jnp.ndarray, bits: int = 8) -> QScale:
+    """Per-output-channel symmetric signed scale; w is [in, out]."""
+    qmax = (1 << (bits - 1)) - 1
+    absmax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)))
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    return QScale(scale=scale, bits=bits, signed=True)
+
+
+def quantize(x: jnp.ndarray, qs: QScale) -> jnp.ndarray:
+    """Float -> int32 codes (round-to-nearest-even, clipped)."""
+    q = jnp.round(x / qs.scale)
+    return jnp.clip(q, qs.qmin, qs.qmax).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, qs: QScale) -> jnp.ndarray:
+    return q.astype(jnp.float32) * qs.scale
+
+
+def fake_quant(x: jnp.ndarray, qs: QScale) -> jnp.ndarray:
+    return dequantize(quantize(x, qs), qs)
+
+
+def quantize_weight(w: jnp.ndarray, bits: int = 8) -> tuple[jnp.ndarray, QScale]:
+    qs = weight_scale(w, bits)
+    return quantize(w, qs), qs
+
+
+@dataclasses.dataclass
+class MinMaxObserver:
+    """Running min/max collector for activation calibration (paper: 2K images).
+
+    Functional: `update` returns a new observer; state is two scalars so it
+    can live inside jit-carried pytrees.
+    """
+    max_val: float = 0.0
+    min_val: float = 0.0
+    count: int = 0
+
+    def update(self, x: jnp.ndarray) -> "MinMaxObserver":
+        mx = float(jnp.max(x))
+        mn = float(jnp.min(x))
+        if self.count == 0:
+            return MinMaxObserver(mx, mn, 1)
+        return MinMaxObserver(max(self.max_val, mx), min(self.min_val, mn),
+                              self.count + 1)
+
+    def scale(self, bits: int = 8, signed: Optional[bool] = None) -> QScale:
+        if signed is None:
+            signed = self.min_val < 0
+        span = max(abs(self.max_val), abs(self.min_val)) if signed else self.max_val
+        return act_scale_from_stats(span, bits=bits, signed=signed)

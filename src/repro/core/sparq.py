@@ -1,0 +1,153 @@
+"""SPARQ: the paper's technique as a composable, configurable JAX module.
+
+`SparqConfig` selects every knob the paper evaluates (Tables 2/4): window
+width (4/3/2 bits), placement options (5/3/2opt, 6opt, 7opt), rounding (±R),
+vSPARQ (±vS), plus our signed extension for transformer activations.
+
+`sparq_dot` / `sparq_linear` are the float-level reference path used by the
+models on CPU; the Pallas kernel in `repro.kernels` implements the same
+semantics fused into the matmul and is validated against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import bsparq, vsparq
+from repro.core.quantizer import QScale, quantize, weight_scale
+
+
+@dataclasses.dataclass(frozen=True)
+class SparqConfig:
+    """Configuration of the SPARQ quantizer (paper §3, §5).
+
+    bits/opts combinations evaluated in the paper:
+      (4, 5) 5opt · (4, 3) 3opt · (4, 2) 2opt · (3, 6) 6opt · (2, 7) 7opt
+    """
+    bits: int = 4
+    opts: int = 5
+    rounding: bool = True          # +R
+    vsparq: bool = True            # pair-level sparsity (Eq. 2)
+    signed: bool = False           # signed magnitude extension (beyond paper)
+    act_bits: int = 8              # base PTQ bit-width of activations
+    weight_bits: int = 8           # per-channel weight bit-width
+    enabled: bool = True           # False -> plain A8W8 (paper's baseline)
+
+    @property
+    def shifts(self) -> tuple[int, ...]:
+        return bsparq.shifts_for(self.bits, self.opts)
+
+    @property
+    def max_val(self) -> int:
+        return (1 << (self.act_bits - 1)) - 1 if self.signed \
+            else (1 << self.act_bits) - 1
+
+    @property
+    def name(self) -> str:
+        tag = f"{self.bits}b-{self.opts}opt"
+        tag += "+R" if self.rounding else "-R"
+        tag += "+vS" if self.vsparq else "-vS"
+        return tag + ("(signed)" if self.signed else "")
+
+    # Common named configurations
+    @staticmethod
+    def opt5(**kw) -> "SparqConfig":
+        return SparqConfig(bits=4, opts=5, **kw)
+
+    @staticmethod
+    def opt3(**kw) -> "SparqConfig":
+        return SparqConfig(bits=4, opts=3, **kw)
+
+    @staticmethod
+    def opt2(**kw) -> "SparqConfig":
+        return SparqConfig(bits=4, opts=2, **kw)
+
+    @staticmethod
+    def opt6(**kw) -> "SparqConfig":  # 3-bit
+        return SparqConfig(bits=3, opts=6, **kw)
+
+    @staticmethod
+    def opt7(**kw) -> "SparqConfig":  # 2-bit
+        return SparqConfig(bits=2, opts=7, **kw)
+
+    @staticmethod
+    def a8w8() -> "SparqConfig":
+        return SparqConfig(enabled=False)
+
+
+def sparq_recon_int(q: jnp.ndarray, cfg: SparqConfig) -> jnp.ndarray:
+    """Integer codes -> SPARQ-reconstructed integer codes (last axis = K)."""
+    if not cfg.enabled:
+        return q
+    if cfg.vsparq:
+        fn = vsparq.vsparq_recon_signed if cfg.signed else vsparq.vsparq_recon
+    else:
+        fn = bsparq.bsparq_recon_signed if cfg.signed else bsparq.bsparq_recon
+    return fn(q, cfg.bits, cfg.shifts, cfg.rounding, cfg.max_val)
+
+
+def sparq_fake_quant(x: jnp.ndarray, act_qs: QScale,
+                     cfg: SparqConfig) -> jnp.ndarray:
+    """Float activations -> float SPARQ reconstruction (reference path)."""
+    q = quantize(x, act_qs)
+    r = sparq_recon_int(q, cfg)
+    return r.astype(x.dtype) * act_qs.scale
+
+
+def sparq_dot(x: jnp.ndarray, w_q: jnp.ndarray, act_qs: QScale,
+              w_qs: QScale, cfg: SparqConfig,
+              keep_idx: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Quantized dot product: x [..., K] float, w_q [K, N] int codes.
+
+    Matches the paper's datapath: activations quantized to act_bits, SPARQ'd
+    dynamically (optionally through the STC 2:4 path when keep_idx is given),
+    multiplied against integer weights, rescaled by act_scale * w_scale.
+    """
+    q = quantize(x, act_qs)
+    if keep_idx is not None:
+        r = vsparq.vsparq_recon_grouped(
+            q, keep_idx, cfg.bits, cfg.shifts, cfg.rounding, cfg.max_val,
+            signed=cfg.signed)
+    else:
+        r = sparq_recon_int(q, cfg)
+    acc = jnp.matmul(r.astype(jnp.float32), w_q.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return acc * act_qs.scale * w_qs.scale
+
+
+def sparq_linear(x: jnp.ndarray, w: jnp.ndarray, act_qs: QScale,
+                 cfg: SparqConfig) -> jnp.ndarray:
+    """Convenience: quantize weights on the fly (per-output-channel)."""
+    w_qs = weight_scale(w, cfg.weight_bits)
+    w_q = quantize(w, w_qs)
+    return sparq_dot(x, w_q, act_qs, w_qs, cfg)
+
+
+def sparq_dot_stc(x: jnp.ndarray, w: jnp.ndarray, act_qs: QScale,
+                  cfg: SparqConfig, chunk: int = 32) -> jnp.ndarray:
+    """Sparse-Tensor-Core simulation (paper §5.3): w is 2:4-pruned along its
+    reduction axis; per *output channel*, the STC muxes the 2 surviving
+    activations of each group of 4 and vSPARQ pairs them. Because the
+    selection differs per output channel, reconstruction is per-channel —
+    computed in channel chunks to bound memory."""
+    from repro.core.pruning import keep_indices
+    from repro.core.vsparq import vsparq_recon_grouped
+    w_qs = weight_scale(w, cfg.weight_bits)
+    w_q = quantize(w, w_qs)                       # [K, N]
+    keep = keep_indices(w, axis=0)                # [N, K/4, 2]
+    q = quantize(x, act_qs)                       # [..., K]
+    N = w.shape[1]
+    outs = []
+    for c0 in range(0, N, chunk):
+        kc = keep[c0:c0 + chunk]                  # [C, G, 2]
+        qx = q[..., None, :]                      # [..., 1, K]
+        recon = vsparq_recon_grouped(
+            jnp.broadcast_to(qx, q.shape[:-1] + (kc.shape[0], q.shape[-1])),
+            kc, cfg.bits, cfg.shifts, cfg.rounding, cfg.max_val,
+            signed=cfg.signed)                    # [..., C, K]
+        y = jnp.einsum("...ck,kc->...c", recon.astype(jnp.float32),
+                       w_q[:, c0:c0 + chunk].astype(jnp.float32))
+        outs.append(y * act_qs.scale * w_qs.scale[c0:c0 + chunk])
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,81 @@
+"""vSPARQ: value-level sparsity over activation pairs (paper §3.2, Eq. 2).
+
+Activations are grouped in pairs along the dot-product (reduction) axis.
+If one member of the pair is zero, the other keeps its full 8-bit precision
+(it borrows the partner's n-bit budget via Eq. 3); only when both are
+non-zero is each trimmed by bSPARQ.
+
+Functions operate on int32 arrays whose **last axis is the reduction axis**
+(length must be even); they are the oracle for the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bsparq import bsparq_recon
+
+
+def vsparq_recon(
+    x: jnp.ndarray, n_bits: int, shifts: tuple[int, ...], rounding: bool,
+    max_val: int = 255,
+) -> jnp.ndarray:
+    """Eq. (2) reconstruction for non-negative int32 values.
+
+    x[..., K] with K even. Returns same-shape int32 reconstruction.
+    """
+    if x.shape[-1] % 2 != 0:
+        raise ValueError(f"reduction axis must be even, got {x.shape[-1]}")
+    pairs = x.reshape(*x.shape[:-1], -1, 2)
+    a, b = pairs[..., 0], pairs[..., 1]
+    trimmed_a = bsparq_recon(a, n_bits, shifts, rounding, max_val)
+    trimmed_b = bsparq_recon(b, n_bits, shifts, rounding, max_val)
+    # partner zero -> keep full precision; else bSPARQ (Eq. 2 cases).
+    ra = jnp.where(b == 0, a, trimmed_a)
+    rb = jnp.where(a == 0, b, trimmed_b)
+    out = jnp.stack([ra, rb], axis=-1)
+    return out.reshape(x.shape)
+
+
+def vsparq_recon_signed(
+    x: jnp.ndarray, n_bits: int, shifts: tuple[int, ...], rounding: bool,
+    max_val: int = 127,
+) -> jnp.ndarray:
+    """Signed extension: pairing decision on |x| == 0; bSPARQ on magnitudes."""
+    sign = jnp.sign(x).astype(jnp.int32)
+    mag = jnp.abs(x).astype(jnp.int32)
+    return sign * vsparq_recon(mag, n_bits, shifts, rounding, max_val)
+
+
+def vsparq_recon_grouped(
+    x: jnp.ndarray,
+    keep_idx: jnp.ndarray,
+    n_bits: int,
+    shifts: tuple[int, ...],
+    rounding: bool,
+    max_val: int = 255,
+    signed: bool = False,
+) -> jnp.ndarray:
+    """Sparse-Tensor-Core path (paper §5.3, Table 6).
+
+    With 2:4 structured weight pruning, the STC muxes 2 of every 4 activations
+    (those aligned with surviving weights); vSPARQ then pairs the two selected
+    activations. `keep_idx[..., G, 2]` holds, per group of 4 along the last
+    axis of x, the two selected positions (0..3). Returns the same-shape
+    reconstruction with the *selected* lanes vSPARQ'd; unselected lanes are
+    passed through untouched (they are multiplied by zero weights anyway).
+    """
+    if x.shape[-1] % 4 != 0:
+        raise ValueError(f"reduction axis must be divisible by 4, got {x.shape[-1]}")
+    g = x.reshape(*x.shape[:-1], -1, 4)
+    while keep_idx.ndim < g.ndim:   # broadcast leading batch dims
+        keep_idx = keep_idx[None]
+    picked = jnp.take_along_axis(g, keep_idx, axis=-1)  # [..., G, 2]
+    flat = picked.reshape(*picked.shape[:-2], -1)
+    recon = (vsparq_recon_signed if signed else vsparq_recon)(
+        flat, n_bits, shifts, rounding, max_val)
+    recon = recon.reshape(picked.shape)
+    scattered = g  # unselected lanes pass through (they meet zero weights)
+    for j in range(2):
+        scattered = jnp.where(
+            jnp.arange(4) == keep_idx[..., j:j + 1], recon[..., j:j + 1], scattered)
+    return scattered.reshape(x.shape)

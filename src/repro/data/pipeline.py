@@ -1,0 +1,90 @@
+"""Deterministic synthetic data pipeline, sharded and restart-exact.
+
+Every batch is a pure function of (seed, step, shard), so training restarts
+replay the exact token stream with no data-loader state to checkpoint —
+the fault-tolerance contract (DESIGN.md §5). The synthetic LM task is a
+structured Markov-ish stream (not uniform noise) so models actually learn
+and PTQ accuracy deltas are measurable.
+
+Host sharding: `Batcher.local_batch(step)` materializes only this host's
+shard; `global_batch` builds the full array (single-host runs / tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    n_states: int = 64          # markov states for the synthetic stream
+    frontend: str = "none"      # vlm/audio stub inputs
+    frontend_len: int = 0
+    d_model: int = 0
+
+
+def _markov_tokens(key, cfg: DataConfig, batch: int) -> jnp.ndarray:
+    """Structured stream: tokens follow a sparse per-state transition table
+    derived from the seed (low entropy -> learnable)."""
+    V, S = cfg.vocab_size, cfg.seq_len
+    table_key = jax.random.PRNGKey(cfg.seed)  # fixed task, not per-batch
+    # each state maps to 8 candidate next-tokens
+    cand = jax.random.randint(table_key, (cfg.n_states, 8), 0, V)
+
+    def step(state, k):
+        choice = jax.random.randint(k, state.shape, 0, 8)
+        tok = jnp.take_along_axis(cand[state % cfg.n_states],
+                                  choice[:, None], 1)[:, 0]
+        return tok % cfg.n_states, tok
+
+    keys = jax.random.split(key, S)
+    state0 = jax.random.randint(key, (batch,), 0, cfg.n_states)
+    _, toks = jax.lax.scan(step, state0, keys)
+    return toks.T  # [B, S]
+
+
+@dataclasses.dataclass
+class Batcher:
+    cfg: DataConfig
+    host_id: int = 0
+    n_hosts: int = 1
+
+    def _batch(self, step: int, batch: int, offset: int) -> Dict:
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), step),
+            offset)
+        toks = _markov_tokens(key, self.cfg, batch)
+        out = {"tokens": toks,
+               "labels": jnp.concatenate(
+                   [toks[:, 1:], jnp.full((batch, 1), -1, toks.dtype)], 1)}
+        if self.cfg.frontend == "vision":
+            out["image_embeds"] = jax.random.normal(
+                jax.random.fold_in(key, 7),
+                (batch, self.cfg.frontend_len, self.cfg.d_model),
+                jnp.float32) * 0.02
+        elif self.cfg.frontend == "audio":
+            out["frames"] = jax.random.normal(
+                jax.random.fold_in(key, 8),
+                (batch, self.cfg.seq_len, self.cfg.d_model),
+                jnp.float32) * 0.02
+        return out
+
+    def global_batch(self, step: int) -> Dict:
+        return self._batch(step, self.cfg.global_batch, 0)
+
+    def local_batch(self, step: int) -> Dict:
+        per = self.cfg.global_batch // self.n_hosts
+        return self._batch(step, per, self.host_id * 1009)
+
+    def calib_batches(self, n: int, batch: Optional[int] = None):
+        """Calibration set (paper: 2K random training samples)."""
+        b = batch or min(self.cfg.global_batch, 8)
+        return [self._batch(10_000_000 + i, b, 0) for i in range(n)]

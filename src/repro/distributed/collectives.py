@@ -1,0 +1,76 @@
+"""Distributed-optimization tricks (DESIGN.md §5, beyond paper):
+
+1. SPARQ gradient compression with error feedback — the paper's own
+   windowed-quantization idea re-applied to the gradient all-reduce:
+   gradients are quantized to int8 then bSPARQ'd to 4 bits + 3-bit shift
+   (7.5 effective bits incl. pair metadata -> ~4x reduce-scatter volume vs
+   f32). Error feedback makes the compression unbiased over time (the
+   residual is added back the next step), the standard convergence fix.
+
+2. Hierarchical pod reduction for shard_map code paths: reduce within a
+   pod's 'data' axis first, then across the 'pod' axis — two small hops on
+   fast intra-pod ICI instead of one 512-way ring over the pod link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bsparq import bsparq_recon_signed, shifts_for
+
+
+def sparq_compress(g: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Fake-quant SPARQ compression of one gradient tensor (per-tensor
+    scale; signed windowed 4-bit). Returns the reconstruction (what the
+    receiving side would decode)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int32)
+    r = bsparq_recon_signed(q, bits, shifts_for(bits, 8 - bits + 1),
+                            rounding=True)
+    return r.astype(g.dtype) * scale
+
+
+@dataclasses.dataclass
+class GradCompressor:
+    """Error-feedback SPARQ gradient compression.
+
+    state: residual pytree (same structure as grads, zeros at init).
+    `compress(grads, state) -> (compressed_grads, new_state)`; the
+    compressed grads are what crosses the wire (here: what the all-reduce
+    sees), the residual carries the quantization error to the next step.
+    """
+    bits: int = 4
+    min_size: int = 4096   # tiny tensors (norms, scalars) stay exact
+
+    def init(self, grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def compress(self, grads: Any, state: Any) -> Tuple[Any, Any]:
+        def one(g, e):
+            if g.size < self.min_size:
+                return g, jnp.zeros_like(e)
+            target = g.astype(jnp.float32) + e
+            c = sparq_compress(target, self.bits)
+            return c.astype(g.dtype), target - c.astype(jnp.float32)
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(state)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+                jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+
+def hierarchical_psum(x: jnp.ndarray, pod_axis: str = "pod",
+                      data_axis: str = "data") -> jnp.ndarray:
+    """Two-stage all-reduce for shard_map bodies on the multi-pod mesh."""
+    x = jax.lax.psum(x, data_axis)
+    return jax.lax.psum(x, pod_axis)
+
+
+def compressed_psum(x: jnp.ndarray, axis: str, bits: int = 4) -> jnp.ndarray:
+    """shard_map building block: SPARQ-compress, then reduce. The quantize
+    happens before the wire so the reduce moves 8-bit codes; the fake-quant
+    emulation here preserves exact arithmetic of the decoded values."""
+    return jax.lax.psum(sparq_compress(x, bits), axis)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for SPARQ's compute hot-spot (the quantized matmul)."""
+from repro.kernels.ops import quantized_matmul, sparq_quantize, bytes_per_value
+from repro.kernels.sparq_matmul import sparq_matmul_pallas
+from repro.kernels.sparq_quant import sparq_quant_pallas
+
+__all__ = ["quantized_matmul", "sparq_quantize", "bytes_per_value",
+           "sparq_matmul_pallas", "sparq_quant_pallas"]

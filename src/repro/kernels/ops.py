@@ -1,0 +1,110 @@
+"""Public jit'd wrappers around the SPARQ kernels.
+
+`quantized_matmul` is what the model layers call. Dispatch:
+  impl="pallas"     — the fused TPU kernel (interpret=True off-TPU);
+  impl="reference"  — pure-jnp oracle semantics via an int dot_general
+                      (what the XLA int8 MXU path lowers to on TPU);
+  impl="auto"       — pallas on TPU backends, reference elsewhere.
+
+Handles padding to tile multiples (K is padded in whole pairs so vSPARQ
+decisions are unchanged; M/N zero-padding is dropped from the result).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QScale
+from repro.core.sparq import SparqConfig
+from repro.kernels import ref as _ref
+from repro.kernels.sparq_matmul import sparq_matmul_pallas
+from repro.kernels.sparq_quant import sparq_quant_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def bytes_per_value(cfg: SparqConfig) -> float:
+    """HBM residency of the packed SPARQ format (paper §5.1): n data bits +
+    3-bit ShiftCtrl per value + 1 MuxCtrl per pair. Used by the roofline."""
+    if not cfg.enabled:
+        return 1.0  # plain int8
+    return (cfg.bits + 3 + 0.5) / 8.0
+
+
+def quantized_matmul(
+    x: jnp.ndarray,            # (..., K) float activations
+    w_codes: jnp.ndarray,      # (K, N) int8 weight codes
+    act_qs: QScale,
+    chan_scale: jnp.ndarray,   # (N,) f32
+    cfg: SparqConfig,
+    impl: str = "auto",
+    block: tuple[int, int, int] = (128, 128, 512),
+) -> jnp.ndarray:
+    """SPARQ-quantized x @ dequant(w). Leading dims of x are flattened."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w_codes.shape[1]
+    assert K % 2 == 0, "vSPARQ pairs adjacent K lanes; K must be even"
+    x2 = x.reshape(-1, K)
+    kw = dict(bits=cfg.bits, opts_shifts=cfg.shifts, rounding=cfg.rounding,
+              vsparq=cfg.vsparq, signed=cfg.signed, max_val=cfg.max_val,
+              enabled=cfg.enabled)
+    if impl == "reference":
+        out = _ref.ref_sparq_matmul(x2, w_codes, act_qs.scale, chan_scale, **kw)
+    elif impl == "pallas":
+        bm, bn, bk = block
+        M = x2.shape[0]
+        xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+        wp = _pad_to(_pad_to(w_codes, bk, 0), bn, 1)
+        cp = _pad_to(chan_scale, bn, 0)
+        out = sparq_matmul_pallas(
+            xp, wp, jnp.asarray(act_qs.scale, jnp.float32), cp,
+            bm=bm, bn=bn, bk=bk, interpret=not _on_tpu(), **kw)
+        out = out[:M, :N]
+    else:
+        raise ValueError(impl)
+    return out.reshape(*lead, N)
+
+
+def sparq_quantize(
+    x: jnp.ndarray,           # (..., K) float
+    act_qs: QScale,
+    cfg: SparqConfig,
+    impl: str = "auto",
+    bm: int = 256,
+):
+    """Standalone SPARQ quantization (KV-cache path). Returns
+    (codes int8, meta int8) with x's shape."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    kw = dict(bits=cfg.bits, opts_shifts=cfg.shifts, rounding=cfg.rounding,
+              vsparq=cfg.vsparq, signed=cfg.signed, max_val=cfg.max_val)
+    if impl == "reference":
+        codes, meta = _ref.ref_sparq_quant(x2, act_qs.scale, **kw)
+    else:
+        M = x2.shape[0]
+        xp = _pad_to(x2, bm, 0)
+        codes, meta = sparq_quant_pallas(
+            xp, jnp.asarray(act_qs.scale, jnp.float32),
+            bm=bm, interpret=not _on_tpu(), **kw)
+        codes, meta = codes[:M], meta[:M]
+    return codes.reshape(*lead, K), meta.reshape(*lead, K)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels (single source of truth is
+repro.core; these wrappers match the kernels' exact signatures/dtypes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bsparq import bsparq_encode
+from repro.core.sparq import SparqConfig, sparq_recon_int
+
+
+def _cfg(bits, shifts, rounding, vsparq, signed, max_val, enabled=True):
+    opts = len(shifts)
+    return SparqConfig(bits=bits, opts=opts, rounding=rounding, vsparq=vsparq,
+                       signed=signed, enabled=enabled,
+                       act_bits=8)
+
+
+def ref_sparq_matmul(x, w_codes, act_scale, chan_scale, *, bits=4,
+                     opts_shifts=(0, 1, 2, 3, 4), rounding=True, vsparq=True,
+                     signed=False, max_val=255, enabled=True):
+    """Oracle for sparq_matmul_pallas: float x, int8 weight codes."""
+    qmin = -max_val if signed else 0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / act_scale), qmin, max_val)
+    q = q.astype(jnp.int32)
+    cfg = _cfg(bits, opts_shifts, rounding, vsparq, signed, max_val, enabled)
+    r = sparq_recon_int(q, cfg) if enabled else q
+    if signed and max_val <= 127:
+        # native int8 x int8 -> int32 dot (the v5e MXU path). Keeping both
+        # operands int8 also keeps the FSDP weight all-gather at 1 byte —
+        # int32 operands made GSPMD gather 4x the bytes (§Perf iteration 4).
+        acc = jax.lax.dot_general(
+            r.astype(jnp.int8), w_codes.astype(jnp.int8),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:
+        acc = jax.lax.dot_general(  # exact int32 accumulation (unsigned)
+            r, w_codes.astype(jnp.int32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * act_scale * chan_scale[None, :])
+
+
+def ref_sparq_quant(x, act_scale, *, bits=4, opts_shifts=(0, 1, 2, 3, 4),
+                    rounding=True, vsparq=True, signed=True, max_val=127):
+    """Oracle for sparq_quant_pallas: returns (codes int8, meta int8)."""
+    qmin = -max_val if signed else 0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / act_scale), qmin, max_val)
+    q = q.astype(jnp.int32)
+    sign = jnp.sign(q)
+    mag = jnp.abs(q)
+    qq, ss = bsparq_encode(mag, bits, opts_shifts, rounding, max_val)
+    trimmed = jnp.left_shift(qq, ss)
+    if vsparq:
+        pairs = mag.reshape(*mag.shape[:-1], -1, 2)
+        a, b = pairs[..., 0], pairs[..., 1]
+        partner = jnp.stack([b, a], axis=-1).reshape(mag.shape)
+        full = partner == 0
+        recon = jnp.where(full, mag, trimmed)
+        shift_code = jnp.where(full, 0, ss)
+        mux = full
+    else:
+        recon = trimmed
+        shift_code = ss
+        mux = jnp.zeros_like(mag, dtype=jnp.bool_)
+    codes = (sign * recon).astype(jnp.int8)
+    mux_i = mux.astype(jnp.int32).reshape(*mag.shape[:-1], -1, 2)
+    s_pair = shift_code.reshape(*mag.shape[:-1], -1, 2)
+    mux_any = jnp.minimum(mux_i[..., 0] + mux_i[..., 1], 1)
+    meta_pair = mux_any * 64 + s_pair[..., 0] * 8 + s_pair[..., 1]
+    meta = jnp.repeat(meta_pair, 2, axis=-1).astype(jnp.int8)
+    return codes, meta

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (assignment contract): lower + compile every
+(architecture x input shape) cell on the single-pod 16x16 mesh and the
+2x16x16 multi-pod mesh, with ShapeDtypeStruct inputs (no allocation).
+
+Per cell we record: memory_analysis (fits-in-HBM proof), cost_analysis
+(FLOPs/bytes for §Roofline), and per-device collective bytes parsed from
+the post-SPMD HLO (all-gather/all-reduce/reduce-scatter/all-to-all/
+collective-permute operand sizes).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out report.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCHS, SHAPES, cell_is_runnable, get_config,
+                                input_specs)
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim.adamw import AdamW, cosine_schedule
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by collectives, from post-SPMD HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    pat = re.compile(
+        r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(?:-start|-done)?\(")
+    shape_pat = re.compile(r"(\w+)\[([\d,]*)\]")
+    for m in pat.finditer(hlo_text):
+        op = m.group(4)
+        shapes = []
+        if m.group(1) is not None:   # tuple result
+            shapes = shape_pat.findall(m.group(1))
+        else:
+            shapes = [(m.group(2), m.group(3))]
+        nbytes = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        # avoid double counting start/done pairs: count "-start" and bare ops
+        if op + "-done(" in m.group(0):
+            continue
+        out[op] += nbytes
+    return out
+
+
+def model_stats(cfg, shape) -> Dict[str, float]:
+    """Analytic N_total / N_active / MODEL_FLOPS (assignment §Roofline:
+    6*N*D train, 2*N*D inference; MoE uses active params — shared + top-k
+    of the routed experts; embeddings excluded unless tied)."""
+    model = Model(cfg)
+    params_abs = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    total = 0
+    routed = 0
+    embed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_abs)[0]:
+        name = str(path[-1])
+        total += leaf.size
+        if "embed" in name:
+            embed += leaf.size
+        # stacked routed experts are 4-D [L, E, din, dout]
+        if leaf.ndim == 4 and any(
+                k in name for k in ("w_up", "w_gate", "w_down")):
+            routed += leaf.size
+    n_total = total - (0 if cfg.tie_embeddings else embed)
+    active_frac = (cfg.experts_per_token / cfg.n_experts) \
+        if cfg.n_experts else 1.0
+    n_active = n_total - routed * (1.0 - active_frac)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+
+    # ---- analytic HBM traffic (global bytes/step) ----
+    # The per-op HLO estimate (hlo_full.hbm_bytes_est) over-counts flash/
+    # recurrent inner loops whose tiles are VMEM-resident on TPU, so the
+    # roofline memory term uses this first-order model instead:
+    pd = 2 if cfg.param_dtype == jnp.bfloat16 else 4
+    P = total
+    layers = cfg.n_layers + cfg.n_enc_layers
+    d = cfg.d_model
+    cache_per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * 2  # k+v bf16
+    if cfg.kv_lora_rank:
+        cache_per_tok = (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+    if cfg.family == "rwkv6":
+        cache_per_tok = 0   # O(1) state
+    if shape.kind == "train":
+        accum = cfg.train_microbatches
+        weight_traffic = 3 * P * pd * accum      # fwd + remat + bwd reads
+        opt_traffic = P * 4 * (1 + 4)            # grads w + m,v r/w
+        act_traffic = 4 * tokens * d * 2 * layers  # boundaries + attn io
+        hbm = weight_traffic + opt_traffic + act_traffic
+    elif shape.kind == "prefill":
+        hbm = P * 1 + tokens * cache_per_tok * layers \
+            + 4 * tokens * d * 2 * layers        # int8 weights (serving)
+    else:  # decode: weight + cache read dominate
+        T_ctx = shape.seq_len
+        cache_rw = shape.global_batch * T_ctx * cache_per_tok * layers
+        if cfg.family == "rglru":
+            # only 1/3 of layers are (windowed) attention
+            cache_rw = shape.global_batch * min(T_ctx, cfg.local_window) * \
+                2 * cfg.n_kv_heads * cfg.head_dim * 2 * (layers // 3)
+        hbm = P * 1 + cache_rw
+    return {"n_total": int(total), "n_active": int(n_active),
+            "tokens": int(tokens),
+            "model_flops": float(mult * n_active * tokens),
+            "analytic_hbm_bytes": float(hbm)}
+
+
+def _specs_to_shardings(tree, mesh, spec_fn):
+    specs = spec_fn(tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh, sp: bool = True,
+               quantized_serving: bool = True):
+    """Returns (jitted_fn, abstract_args, in_shardings) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    opt = AdamW(lr=cosine_schedule(3e-4, 100, 10_000))
+
+    params_abs = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0),
+                                  dtype=cfg.param_dtype))
+    batch_abs = input_specs(cfg, shape)
+
+    # ZeRO-DP layout only helps training (big global batch); serving keeps
+    # the TP layout so small request batches still shard the model axis,
+    # and ZeRO requires the global batch to divide the full chip count
+    # (256 sequences cannot pure-DP 512 chips — §Perf iteration 16).
+    tp = cfg.tensor_parallel or shape.kind != "train" or \
+        shape.global_batch % mesh.devices.size != 0
+
+    if shape.kind != "train":
+        # serving deploys pre-quantized int8 weights (paper deployment;
+        # §Perf: 4x smaller per-layer weight gathers than f32 masters)
+        from repro.models.quantize import quantize_params
+        params_abs = jax.eval_shape(
+            lambda: quantize_params(model.init_params(
+                jax.random.PRNGKey(0), dtype=jnp.float32)))
+
+    p_specs = shd.param_pspecs(params_abs, mesh, tensor_parallel=tp)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    b_specs = shd.batch_pspecs(batch_abs, mesh, tensor_parallel=tp)
+    b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    shd.set_activation_spec(
+        shd.activation_spec(mesh, sp=sp and shape.kind == "train",
+                            tensor_parallel=tp),
+        mesh=mesh, tensor_parallel=tp)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        o_specs = jax.tree.map(lambda _: None, opt_abs)  # mirror params
+        o_shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            shd.param_pspecs(opt_abs.m, mesh, tensor_parallel=tp),
+            is_leaf=lambda x: isinstance(x, P))
+        opt_shard = type(opt_abs)(
+            m=o_shard, v=o_shard,
+            count=NamedSharding(mesh, P()))
+
+        from repro.launch.train import build_train_step
+        inner = build_train_step(model, opt)
+
+        def train_step(params, opt_state, batch):
+            new_p, new_s, _, metrics = inner(params, opt_state, None, batch)
+            return new_p, new_s, metrics
+
+        fn = jax.jit(train_step,
+                     in_shardings=(p_shard, opt_shard, b_shard),
+                     donate_argnums=(0, 1))
+        return fn, (params_abs, opt_abs, batch_abs), cfg
+
+    # serving path: quantized per the paper (A8W8 + SPARQ on activations)
+    from repro.core.sparq import SparqConfig
+    from repro.models.common import QuantCtx
+    qctx = QuantCtx(mode="quantized",
+                    cfg=SparqConfig.opt5(signed=True),
+                    impl="reference") if quantized_serving else None
+
+    if shape.kind == "prefill":
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len + 16))
+        c_shard = _specs_to_shardings(
+            cache_abs, mesh, lambda t: shd.cache_pspecs(
+                t, model, mesh, tensor_parallel=tp))
+
+        def prefill_step(params, batch, caches):
+            # dynamic per-tensor scales (calibration-free serving fallback)
+            logits, caches = model.prefill(params, batch, caches, ctx=qctx)
+            return jnp.argmax(logits, -1), caches
+
+        fn = jax.jit(prefill_step,
+                     in_shardings=(p_shard, b_shard, c_shard),
+                     donate_argnums=(2,))
+        return fn, (params_abs, batch_abs, cache_abs), cfg
+
+    # decode: one token against a cache holding shape.seq_len tokens
+    # (+16 pad keeps the time axis divisible by the 16-way model axis)
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len + 16))
+    c_shard = _specs_to_shardings(
+        cache_abs, mesh, lambda t: shd.cache_pspecs(
+            t, model, mesh, tensor_parallel=tp))
+
+    def decode_step(params, batch, caches):
+        logits, caches = model.decode_step(
+            params, batch["tokens"], caches, pos=shape.seq_len, ctx=qctx)
+        return jnp.argmax(logits, -1), caches
+
+    fn = jax.jit(decode_step,
+                 in_shardings=(p_shard, b_shard, c_shard),
+                 donate_argnums=(2,))
+    return fn, (params_abs, batch_abs, cache_abs), cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             sp: bool = True) -> Dict[str, Any]:
+    ok, reason = cell_is_runnable(arch, shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args, cfg = build_cell(arch, shape_name, mesh, sp=sp)
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            coll = collective_bytes(compiled.as_text())
+            try:  # while-aware re-analysis (benchmarks/hlo_cost.py)
+                from benchmarks.hlo_cost import HloCost
+                full = HloCost(compiled.as_text()).cost()
+            except Exception as e:
+                full = {"error": str(e)}
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+            flops_per_device=float(cost.get("flops", -1)),
+            bytes_per_device=float(cost.get("bytes accessed", -1)),
+            collective_bytes_per_device=coll,
+            model_stats=model_stats(cfg, SHAPES[shape_name]),
+            hlo_full=full,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+                "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+                "generated_code_bytes":
+                    getattr(mem, "generated_code_size_in_bytes", -1),
+            })
+    except Exception as e:  # a dry-run failure is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    finally:
+        shd.set_activation_spec(None, None)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel residual stream")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mp, sp=not args.no_sp)
+                results.append(rec)
+                status = rec["status"]
+                extra = "" if status != "ok" else (
+                    f" flops/dev={rec['flops_per_device']:.3e}"
+                    f" temp={rec['memory']['temp_bytes']/2**30:.2f}GiB"
+                    f" compile={rec['compile_s']}s")
+                print(f"[{rec['mesh']}] {arch} x {shape}: {status}{extra}",
+                      flush=True)
+                if status == "error":
+                    print(rec["error"], flush=True)
+    n_err = sum(r["status"] == "error" for r in results)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    print(f"{len(results)} cells: "
+          f"{sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped, "
+          f"{n_err} errors")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh builders (assignment contract).
+
+Functions, not module-level constants, so importing this module never
+touches jax device state. The production target is TPU v5e:
+  single pod : (16, 16)    -> ("data", "model"), 256 chips
+  multi-pod  : (2, 16, 16) -> ("pod", "data", "model"), 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

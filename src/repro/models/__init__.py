@@ -1,0 +1,5 @@
+"""Model zoo: 10 assigned architectures + the paper's CNN family."""
+from repro.models.common import ModelConfig, QuantCtx
+from repro.models.model import Model
+
+__all__ = ["ModelConfig", "QuantCtx", "Model"]

@@ -1,0 +1,235 @@
+"""Attention: GQA/MQA/MHA with flash-style chunked softmax, sliding-window
+(block-local) attention, KV caches (optionally SPARQ-quantized), decode.
+
+Memory discipline (DESIGN.md §5): train/prefill never materialize the full
+[Tq, Tk] score matrix — an outer scan over query chunks and inner scan over
+KV chunks carries online-softmax statistics (m, l, acc). Sliding-window
+attention uses the exact two-block trick (each query block attends to its
+own and the previous key block only), so prefill cost is O(T·W) not O(T²).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, QuantCtx, dense, rope
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # [B, Tmax, KV, hd]
+    v: jnp.ndarray          # [B, Tmax, KV, hd]
+    pos: jnp.ndarray        # scalar int32: tokens already in cache
+
+
+def _split_heads(x, n_heads):
+    B, T, _ = x.shape
+    return x.reshape(B, T, n_heads, -1)
+
+
+def _merge_heads(x):
+    B, T, H, hd = x.shape
+    return x.reshape(B, T, H * hd)
+
+
+def qkv_proj(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+             positions: jnp.ndarray, ctx: Optional[QuantCtx] = None):
+    from repro.distributed.sharding import constrain_heads
+    q = _split_heads(dense(params["wq"], x, "attn_q", ctx), cfg.n_heads)
+    k = _split_heads(dense(params["wk"], x, "attn_k", ctx), cfg.n_kv_heads)
+    v = _split_heads(dense(params["wv"], x, "attn_v", ctx), cfg.n_kv_heads)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return constrain_heads(q), constrain_heads(k), constrain_heads(v)
+
+
+def _mask(qpos, kpos, causal: bool, window: int, prefix_len: int):
+    """[..., Tq, Tk] boolean allow-mask from position vectors."""
+    qp = qpos[..., :, None]
+    kp = kpos[..., None, :]
+    allow = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        allow &= kp <= qp
+        if prefix_len:
+            allow |= kp < prefix_len  # prefix-LM: bidirectional over prefix
+    if window:
+        allow &= qp - kp < window
+    return allow
+
+
+def flash_attention(q, k, v, *, causal=True, q_chunk=512, kv_chunk=1024,
+                    window=0, prefix_len=0, q_offset=0, kv_offset=0):
+    """Online-softmax attention. q [B,Tq,H,hd], k/v [B,Tk,KV,hd], GQA via
+    head grouping (no materialized repeat). q_offset/kv_offset: absolute
+    position of q[0]/k[0] (decode, prefill continuation, window blocks)."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tk)
+    nq, nk = -(-Tq // q_chunk), -(-Tk // kv_chunk)
+    # pad to chunk multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_chunk - Tq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kv_chunk - Tk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kv_chunk - Tk), (0, 0), (0, 0)))
+    qg = qp.reshape(B, nq, q_chunk, KV, G, hd)
+    kg = kp.reshape(B, nk, kv_chunk, KV, hd)
+    vg = vp.reshape(B, nk, kv_chunk, KV, hd)
+    qpos_all = q_offset + jnp.arange(nq * q_chunk)
+    kpos_all = kv_offset + jnp.arange(nk * kv_chunk)
+    kvalid = (kpos_all >= 0) & (kpos_all < kv_offset + Tk)
+
+    @jax.checkpoint  # flash backward: recompute scores, never store them
+    def q_step(_, qi):
+        qc = qg[:, qi]                     # [B, qc, KV, G, hd]
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_all, qi * q_chunk, q_chunk)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kc, vc = kg[:, kj], vg[:, kj]  # [B, kc, KV, hd]
+            kpos = jax.lax.dynamic_slice_in_dim(
+                kpos_all, kj * kv_chunk, kv_chunk)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            allow = _mask(qpos, kpos, causal, window, prefix_len)
+            allow &= jax.lax.dynamic_slice_in_dim(
+                kvalid, kj * kv_chunk, kv_chunk)[None, :]
+            s = jnp.where(allow[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(allow[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # [B, KV, G, qc, hd] -> [B, qc, KV*G, hd]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Tq]
+
+
+def local_attention(q, k, v, *, window: int, q_offset=0):
+    """Exact sliding-window attention via the two-block trick: query block i
+    attends to key blocks {i-1, i} only, each pair through the flash
+    (online-softmax, checkpointed) path — O(T*W) compute, one flash tile of
+    peak memory, and head sharding preserved (no 6-D score tensor for GSPMD
+    to trip on)."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    W = window
+    pad = (-T) % W
+    nb = (T + pad) // W
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k2 = jnp.concatenate(  # [B, T+W(+pad), KV, hd]: one block of left ctx
+        [jnp.zeros((B, W, KV, hd), k.dtype), kp], 1)
+    v2 = jnp.concatenate([jnp.zeros((B, W, KV, hd), v.dtype), vp], 1)
+
+    def blk(_, i):
+        qb = jax.lax.dynamic_slice_in_dim(qp, i * W, W, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(k2, i * W, 2 * W, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v2, i * W, 2 * W, axis=1)
+        out = flash_attention(
+            qb, kb, vb, causal=True, window=W,
+            q_chunk=min(512, W), kv_chunk=min(1024, 2 * W),
+            q_offset=i * W, kv_offset=(i - 1) * W)
+        return None, out
+
+    _, outs = jax.lax.scan(blk, None, jnp.arange(nb))  # [nb, B, W, H, hd]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * W, H, hd)
+    return out[:, :T].astype(q.dtype)
+
+
+def decode_attention(q, cache: KVCache, *, window: int = 0):
+    """Single-token decode against a cache. q [B,1,H,hd]."""
+    B, _, H, hd = q.shape
+    KV = cache.k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache.k,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(cache.k.shape[1])
+    allow = kpos < cache.pos
+    if window:
+        allow &= kpos >= cache.pos - window
+    s = jnp.where(allow[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(cache.v.dtype), cache.v)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def cache_update(cache: KVCache, k_new, v_new) -> KVCache:
+    """Insert [B, T_new, KV, hd] at cache.pos (T_new static)."""
+    T_new = k_new.shape[1]
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), cache.pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), cache.pos, axis=1)
+    return KVCache(k=k, v=v, pos=cache.pos + T_new)
+
+
+def attention_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                    positions: jnp.ndarray,
+                    cache: Optional[KVCache] = None,
+                    mode: str = "train",     # train | prefill | decode
+                    window: int = 0,
+                    prefix_len: int = 0,
+                    ctx: Optional[QuantCtx] = None):
+    """Full attention sub-block: qkv -> attend -> out proj.
+    Returns (out, new_cache)."""
+    q, k, v = qkv_proj(params, x, cfg, positions, ctx)
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        new_cache = cache_update(cache, k, v)
+        out = decode_attention(q, new_cache, window=window)
+    else:
+        if mode == "prefill":
+            assert cache is not None
+            new_cache = cache_update(cache, k, v)
+        if window:
+            out = local_attention(q, k, v, window=window)
+        else:
+            out = flash_attention(q, k, v, causal=True,
+                                  q_chunk=cfg.attn_chunk,
+                                  kv_chunk=cfg.attn_chunk,
+                                  prefix_len=prefix_len)
+    out = dense(params["wo"], _merge_heads(out), "attn_out", ctx)
+    return out, new_cache
+
+
+def attention_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    from repro.models.common import init_dense
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": init_dense(ks[0], d, cfg.n_heads * hd, dtype=dtype),
+        "wk": init_dense(ks[1], d, cfg.n_kv_heads * hd, dtype=dtype),
+        "wv": init_dense(ks[2], d, cfg.n_kv_heads * hd, dtype=dtype),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, d,
+                         scale=1.0 / (2 * cfg.n_layers) ** 0.5, dtype=dtype),
+    }

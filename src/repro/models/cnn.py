@@ -1,0 +1,170 @@
+"""Paper-faithful CNN substrate (the paper evaluates ResNet-family CNNs).
+
+Mini-ResNet with ReLU + BatchNorm. Convolutions execute through im2col +
+`dense()` in calibrate/quantized modes, which is exactly the paper's setting
+("standard practice to map the convolution operation to matrix
+multiplication", §4): SPARQ sees the unsigned post-ReLU activation matrix.
+The first conv is left intact (paper §5). BatchNorm running statistics are
+recalibrated during calibration (paper §5, refs [29,33,35,36]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import QuantCtx, dense
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "paper-resnet"
+    num_classes: int = 16
+    width: int = 32
+    stages: tuple = (1, 1, 1)    # residual blocks per stage
+    img_size: int = 32
+    in_channels: int = 3
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def _conv(params_w, x, stride, site, ctx: Optional[QuantCtx]):
+    """3x3 same conv; im2col+dense in quant paths (so SPARQ applies)."""
+    kh, kw, cin, cout = params_w.shape
+    if ctx is None or ctx.mode == "off":
+        return jax.lax.conv_general_dilated(
+            x, params_w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))  # [B,H,W,cin*kh*kw]
+    w2 = params_w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    return dense(w2, patches, site, ctx)
+
+
+def _bn(params, x, train: bool, eps=1e-5):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+    else:
+        mean, var = params["mean"], params["var"]
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * params["scale"] + params["bias"], (mean, var)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def init_params(key, cfg: CNNConfig) -> Dict:
+    keys = iter(jax.random.split(key, 64))
+
+    def conv_w(cin, cout):
+        fan = 9 * cin
+        return jax.random.truncated_normal(
+            next(keys), -2, 2, (3, 3, cin, cout)) * (2.0 / fan) ** 0.5
+
+    p = {"stem": {"w": conv_w(cfg.in_channels, cfg.width),
+                  "bn": _bn_init(cfg.width)},
+         "stages": [], "head": None}
+    c = cfg.width
+    for si, n_blocks in enumerate(cfg.stages):
+        cout = cfg.width * (2 ** si)
+        stage = []
+        for bi in range(n_blocks):
+            blk = {"w1": conv_w(c, cout), "bn1": _bn_init(cout),
+                   "w2": conv_w(cout, cout), "bn2": _bn_init(cout)}
+            if c != cout:
+                blk["proj"] = conv_w(c, cout)
+            stage.append(blk)
+            c = cout
+        p["stages"].append(stage)
+    p["head"] = jax.random.truncated_normal(
+        next(keys), -2, 2, (c, cfg.num_classes)) * (1.0 / c) ** 0.5
+    return p
+
+
+def forward(params, x, cfg: CNNConfig, ctx: Optional[QuantCtx] = None,
+            train: bool = False, bn_stats: Optional[dict] = None):
+    """Returns (logits, batch_bn_stats). The first conv is never quantized
+    (paper §5); its site is 'stem' and is always in skip mode."""
+    stem_ctx = None  # first layer left intact
+    h = _conv(params["stem"]["w"], x, 1, "stem", stem_ctx)
+    h, s = _bn(params["stem"]["bn"], h, train)
+    stats = {"stem": s}
+    h = jax.nn.relu(h)
+    for si, stage in enumerate(params["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            pre = ctx
+            if pre is not None:  # per-block site names (calibrate + eval)
+                pre = dataclasses.replace(
+                    pre, site_prefix=f"s{si}b{bi}/")
+            hh = _conv(blk["w1"], h, stride, "conv1", pre)
+            hh, s1 = _bn(blk["bn1"], hh, train)
+            hh = jax.nn.relu(hh)
+            hh = _conv(blk["w2"], hh, 1, "conv2", pre)
+            hh, s2 = _bn(blk["bn2"], hh, train)
+            skip = h
+            if "proj" in blk:
+                skip = _conv(blk["proj"], h, stride, "proj", pre)
+            h = jax.nn.relu(hh + skip)
+            stats[f"s{si}b{bi}"] = (s1, s2)
+    pooled = jnp.mean(h, axis=(1, 2))
+    return jnp.matmul(pooled, params["head"]), stats
+
+
+def loss_fn(params, batch, cfg: CNNConfig, train=True):
+    logits, _ = forward(params, batch["image"], cfg, train=train)
+    labels = jax.nn.one_hot(batch["label"], cfg.num_classes)
+    ce = -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), -1))
+    return ce
+
+
+def accuracy(params, batch, cfg: CNNConfig,
+             ctx: Optional[QuantCtx] = None) -> jnp.ndarray:
+    logits, _ = forward(params, batch["image"], cfg, ctx=ctx, train=False)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["label"]))
+
+
+def recalibrate_bn(params, batches, cfg: CNNConfig, momentum=0.1):
+    """Paper §5: recompute BN running stats on the calibration set."""
+    params = jax.tree.map(lambda a: a, params)  # shallow copy
+
+    def update(bn, mean, var):
+        bn["mean"] = (1 - momentum) * bn["mean"] + momentum * mean
+        bn["var"] = (1 - momentum) * bn["var"] + momentum * var
+
+    for batch in batches:
+        _, stats = forward(params, batch["image"], cfg, train=True)
+        update(params["stem"]["bn"], *stats["stem"])
+        for si, stage in enumerate(params["stages"]):
+            for bi, blk in enumerate(stage):
+                (m1, v1), (m2, v2) = stats[f"s{si}b{bi}"]
+                update(blk["bn1"], m1, v1)
+                update(blk["bn2"], m2, v2)
+    return params
+
+
+def synthetic_dataset(key, cfg: CNNConfig, n: int):
+    """Deterministic synthetic classification: class = which quadrant-
+    pattern of oriented gratings is present. Learnable by a small CNN in a
+    few hundred CPU steps, sensitive enough that quantization noise shows."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (n,), 0, cfg.num_classes)
+    S = cfg.img_size
+    yy, xx = jnp.mgrid[0:S, 0:S]
+    freqs = 2 * jnp.pi * (1 + jnp.arange(cfg.num_classes) % 4) / 16.0
+    angles = jnp.pi * (jnp.arange(cfg.num_classes) // 4) / 4.0
+    f, a = freqs[labels], angles[labels]
+    phase = jax.random.uniform(k2, (n,)) * 2 * jnp.pi
+    wave = jnp.sin(f[:, None, None] *
+                   (jnp.cos(a)[:, None, None] * xx[None] +
+                    jnp.sin(a)[:, None, None] * yy[None]) + phase[:, None, None])
+    img = wave[..., None].repeat(cfg.in_channels, -1)
+    img = img + 0.45 * jax.random.normal(k3, img.shape)
+    return {"image": img.astype(jnp.float32), "label": labels}

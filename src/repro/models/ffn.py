@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU (llama/mistral/deepseek), GELU (granite/
+starcoder2/whisper), GeGLU (gemma/dbrx). All matmuls route through the
+SPARQ quant hook."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, QuantCtx, dense, init_dense
+
+
+def ffn_apply(params: Dict, x: jnp.ndarray, mlp_type: str,
+              ctx: Optional[QuantCtx] = None) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        g = dense(params["w_gate"], x, "ffn_gate", ctx)
+        u = dense(params["w_up"], x, "ffn_up", ctx)
+        h = jax.nn.silu(g) * u
+    elif mlp_type == "geglu":
+        g = dense(params["w_gate"], x, "ffn_gate", ctx)
+        u = dense(params["w_up"], x, "ffn_up", ctx)
+        h = jax.nn.gelu(g, approximate=True) * u
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(dense(params["w_up"], x, "ffn_up", ctx),
+                        approximate=True)
+    else:
+        raise ValueError(mlp_type)
+    return dense(params["w_down"], h, "ffn_down", ctx)
+
+
+def ffn_init(key, d_model: int, d_ff: int, mlp_type: str, n_layers: int,
+             dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / (2 * n_layers) ** 0.5
+    p = {"w_up": init_dense(ks[0], d_model, d_ff, dtype=dtype),
+         "w_down": init_dense(ks[1], d_ff, d_model, scale=out_scale,
+                              dtype=dtype)}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = init_dense(ks[2], d_model, d_ff, dtype=dtype)
+    return p

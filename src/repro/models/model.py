@@ -1,0 +1,224 @@
+"""Public model API: init / forward / loss / prefill / decode, uniform over
+all 10 architectures, with SPARQ PTQ calibration built in.
+
+A `Model` wraps a ModelConfig; params are plain pytrees so they pjit/shard/
+checkpoint uniformly. The decoder stack is grouped into homogeneous runs
+(transformer.stack_*); the encoder stack (whisper) is a second run list.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import CalibBank
+from repro.models import transformer as tr
+from repro.models.common import (ModelConfig, QuantCtx, chunked_lm_loss,
+                                 cross_entropy_loss, embed_tokens, norm,
+                                 norm_init, sinusoidal_embed)
+
+LB_COEF = 0.01
+Z_COEF = 0.001
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = tr.layer_kinds(cfg)
+        self.groups_meta = tr._group_runs(self.kinds)
+
+    # ------------------------------------------------------------ init
+    def init_params(self, key, dtype=jnp.float32) -> Dict:
+        cfg = self.cfg
+        k_emb, k_blocks, k_enc, k_head = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": (jax.random.truncated_normal(
+                k_emb, -2, 2, (cfg.vocab_size, cfg.d_model)) * 0.02
+            ).astype(dtype),
+            "blocks": tr.stack_init(k_blocks, cfg, self.kinds, dtype),
+            "final_norm": norm_init(cfg.d_model, cfg.norm_type),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.truncated_normal(
+                k_head, -2, 2, (cfg.d_model, cfg.vocab_size)) * 0.02
+            ).astype(dtype)
+        if cfg.is_encdec:
+            params["enc_blocks"] = tr.stack_init(
+                k_enc, cfg.replace(n_layers=cfg.n_enc_layers),
+                ["enc"] * cfg.n_enc_layers, dtype)
+            params["enc_norm"] = norm_init(cfg.d_model, cfg.norm_type)
+        return params
+
+    # ------------------------------------------------------------ pieces
+    def _embed_in(self, params, batch, dtype):
+        from repro.distributed.sharding import constrain
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], dtype)
+        x = constrain(x * jnp.asarray(cfg.d_model ** 0.5, dtype))
+        prefix_len = 0
+        if cfg.family == "vlm" and "image_embeds" in batch:
+            x = jnp.concatenate([batch["image_embeds"].astype(dtype), x], 1)
+            prefix_len = batch["image_embeds"].shape[1]
+        return x, prefix_len
+
+    def _encode(self, params, frames, ctx):
+        cfg = self.cfg
+        x = frames.astype(cfg.dtype)
+        x = x + sinusoidal_embed(x.shape[1], cfg.d_model).astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     x.shape[:2])
+        x, _, _ = tr.stack_apply([("enc", cfg.n_enc_layers)],
+                                 params["enc_blocks"], x, cfg,
+                                 positions=positions, mode="train", ctx=ctx)
+        return norm(params["enc_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+    def _head(self, params, x):
+        w = params["embed"].T if self.cfg.tie_embeddings \
+            else params["lm_head"]
+        return jnp.matmul(x, w.astype(x.dtype))
+
+    # ------------------------------------------------------------ train
+    def forward(self, params, batch: Dict, ctx: Optional[QuantCtx] = None,
+                scales_groups=None) -> jnp.ndarray:
+        """Full-sequence hidden states (pre-head)."""
+        cfg = self.cfg
+        x, prefix_len = self._embed_in(params, batch, cfg.dtype)
+        if cfg.is_encdec:
+            enc_out = self._encode(params, batch["frames"], ctx)
+        else:
+            enc_out = None
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     x.shape[:2])
+        x, _, aux = tr.stack_apply(
+            self.groups_meta, params["blocks"], x, cfg, positions=positions, mode="train",
+            ctx=ctx, scales_groups=scales_groups, prefix_len=prefix_len,
+            enc_out=enc_out)
+        x = norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        self._last_aux = aux
+        return x, prefix_len
+
+    def logits(self, params, batch, ctx=None) -> jnp.ndarray:
+        x, prefix_len = self.forward(params, batch, ctx)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        return self._head(params, x)
+
+    def loss(self, params, batch: Dict, ctx: Optional[QuantCtx] = None,
+             scales_groups=None) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        x, prefix_len = self.forward(params, batch, ctx, scales_groups)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        lm = chunked_lm_loss(head, x, batch["labels"],
+                             cfg.logit_chunk or x.shape[1])
+        aux = getattr(self, "_last_aux", {"lb_loss": 0.0, "z_loss": 0.0})
+        total = lm + LB_COEF * aux["lb_loss"] + Z_COEF * aux["z_loss"]
+        return total, {"lm_loss": lm, **aux}
+
+    # ------------------------------------------------------------ serve
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return tr.stack_cache_init(self.cfg, self.kinds, batch, max_len,
+                                   dtype)
+
+    def prefill(self, params, batch: Dict, caches,
+                ctx: Optional[QuantCtx] = None, scales_groups=None):
+        """Process the prompt; returns (last_token_logits, caches)."""
+        cfg = self.cfg
+        x, prefix_len = self._embed_in(params, batch, cfg.dtype)
+        enc_out = self._encode(params, batch["frames"], ctx) \
+            if cfg.is_encdec else None
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                     x.shape[:2])
+        x, caches, _ = tr.stack_apply(
+            self.groups_meta, params["blocks"], x, cfg, positions=positions, caches=caches,
+            mode="prefill", ctx=ctx, scales_groups=scales_groups,
+            prefix_len=prefix_len, enc_out=enc_out)
+        x = norm(params["final_norm"], x[:, -1:], cfg.norm_type, cfg.norm_eps)
+        return self._head(params, x)[:, 0], caches
+
+    def decode_step(self, params, tokens, caches, pos,
+                    ctx: Optional[QuantCtx] = None, scales_groups=None):
+        """One token for every sequence. tokens [B,1]; pos: scalar absolute
+        position. Returns (logits [B,V], caches)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg.dtype)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None],
+                                     (x.shape[0], 1))
+        x, caches, _ = tr.stack_apply(
+            self.groups_meta, params["blocks"], x, cfg, positions=positions, caches=caches,
+            mode="decode", ctx=ctx, scales_groups=scales_groups)
+        x = norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        return self._head(params, x)[:, 0], caches
+
+    # ------------------------------------------------------------ PTQ
+    def quant_sites(self) -> List[str]:
+        """All dense() site names reachable for this family."""
+        fam_sites = {
+            "dense": ["attn_q", "attn_k", "attn_v", "attn_out",
+                      "ffn_gate", "ffn_up", "ffn_down"],
+            "moe": ["attn_q", "attn_k", "attn_v", "attn_out"],
+            "mla": ["mla_q", "mla_dkv", "mla_uk", "mla_uv", "mla_out",
+                    "ffn_gate", "ffn_up", "ffn_down"],
+            "rwkv": ["tm_r", "tm_k", "tm_v", "tm_g", "tm_out",
+                     "cm_k", "cm_r", "cm_v"],
+            "rg": ["rg_gate", "rg_in", "rg_rgate", "rg_igate", "rg_out",
+                   "attn_q", "attn_k", "attn_v", "attn_out",
+                   "ffn_gate", "ffn_up", "ffn_down"],
+        }
+        fam = self.cfg.family
+        if fam in ("dense", "vlm", "encdec"):
+            return fam_sites["dense"]
+        if fam == "moe":
+            return fam_sites["mla"] if self.cfg.kv_lora_rank \
+                else fam_sites["moe"] + ["ffn_gate", "ffn_up", "ffn_down"]
+        if fam == "rwkv6":
+            return fam_sites["rwkv"]
+        if fam == "rglru":
+            return fam_sites["rg"]
+        raise ValueError(fam)
+
+    def calibrate(self, params, batches: Iterable[Dict],
+                  signed: bool = True) -> list:
+        """Eager per-layer calibration (paper §5: min-max over ~2K samples).
+        Runs blocks layer-by-layer so each layer gets its own observer;
+        returns `scales_groups` (list parallel to params['blocks'] of
+        {site: (count,) f32}) for stack_apply / the quantized path."""
+        cfg = self.cfg
+        bank = CalibBank()
+        for batch in batches:
+            x, prefix_len = self._embed_in(params, batch, cfg.dtype)
+            enc_out = self._encode(params, batch["frames"], QuantCtx.off()) \
+                if cfg.is_encdec else None
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                         x.shape[:2])
+            for gi, ((kind, count), stacked) in enumerate(
+                        zip(self.groups_meta, params["blocks"])):
+                for li in range(count):
+                    p_l = jax.tree.map(lambda a: a[li], stacked)
+                    ctx = QuantCtx(mode="calibrate", collect=bank,
+                                   site_prefix=f"g{gi}.l{li}/")
+                    x, _, _ = tr.block_apply(
+                        p_l, x, cfg, kind, positions=positions, mode="train",
+                        ctx=ctx, prefix_len=prefix_len, enc_out=enc_out)
+        # assemble stacked per-group scale arrays
+        groups = []
+        for gi, (kind, count) in enumerate(self.groups_meta):
+            sites = {}
+            for name, obs in bank.observers.items():
+                if not name.startswith(f"g{gi}."):
+                    continue
+                li = int(name.split(".l")[1].split("/")[0])
+                site = name.split("/")[1]
+                span = max(abs(obs.max_val), abs(obs.min_val)) if signed \
+                    else obs.max_val
+                sites.setdefault(site, [0.0] * count)[li] = float(span)
+            groups.append({s: jnp.asarray(v, jnp.float32)
+                           for s, v in sites.items()})
+        return groups
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts with capacity-based sort dispatch (EP-shardable).
+
+Top-k token-choice routing. Dispatch avoids the O(T·E·C) one-hot tensor:
+assignments are sorted by expert, a small (E, C) slot table is scattered
+with token indices, and tokens are *gathered* into the (E, C, D) buffer —
+the standard capacity-based schedule (tokens over capacity drop to the
+residual path). Experts run as one batched (E, C, D)x(E, D, F) matmul so
+the 'model' mesh axis shards E (expert parallelism); GSPMD inserts the
+all-to-all at the token->expert resharding boundary.
+
+Aux losses: Switch-style load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, QuantCtx, init_dense
+
+
+def _expert_ffn(wg, wu, wd, x, mlp_type):
+    """x: [E, C, D]; weights [E, D, F]/[E, F, D]."""
+    up = jnp.einsum("ecd,edf->ecf", x, wu.astype(x.dtype))
+    if mlp_type in ("swiglu", "geglu"):
+        gate = jnp.einsum("ecd,edf->ecf", x, wg.astype(x.dtype))
+        act = jax.nn.silu(gate) if mlp_type == "swiglu" else \
+            jax.nn.gelu(gate, approximate=True)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
+
+
+def moe_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+              ctx: Optional[QuantCtx] = None, exact_capacity: bool = False):
+    """x: [B, T, D]. Returns (y, aux) with aux = {lb_loss, z_loss}.
+    exact_capacity=True (decode): capacity covers the worst case so no
+    token is ever dropped (serving correctness)."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    N = B * T
+    C = N if exact_capacity else \
+        min(N, max(int(N * K / E * cfg.capacity_factor), 1))
+    xt = x.reshape(N, D)
+
+    logits = jnp.matmul(xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))  # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)             # [N, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # ---- capacity-based slotting ----
+    flat_expert = expert_ids.reshape(-1)                        # [N*K]
+    flat_token = jnp.repeat(jnp.arange(N), K)
+    flat_gate = gate_vals.reshape(-1)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)    # [N*K, E]
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1) * onehot
+    slot = jnp.sum(pos_in_expert, axis=-1)                      # [N*K]
+    keep = slot < C
+    slot_c = jnp.where(keep, slot, C - 1)
+    # slot table: token index feeding each (expert, slot); -1 = empty
+    table = jnp.full((E, C), -1, jnp.int32)
+    table = table.at[flat_expert, slot_c].set(
+        jnp.where(keep, flat_token, -1), mode="drop")
+    gates = jnp.zeros((E, C), jnp.float32)
+    gates = gates.at[flat_expert, slot_c].set(
+        jnp.where(keep, flat_gate, 0.0), mode="drop")
+
+    # gather tokens -> [E, C, D]; empty slots read token 0, masked by gate 0
+    buf = jnp.take(xt, jnp.maximum(table, 0), axis=0)
+    buf = buf * (table >= 0)[..., None].astype(buf.dtype)
+
+    out_buf = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"],
+                          buf, cfg.mlp_type)                    # [E, C, D]
+
+    # combine: scatter-add expert outputs back to tokens
+    y = jnp.zeros((N, D), out_buf.dtype)
+    y = y.at[jnp.maximum(table, 0).reshape(-1)].add(
+        (out_buf * gates[..., None].astype(out_buf.dtype)).reshape(-1, D),
+        mode="drop")
+
+    # shared experts (deepseek): always-on, fused into one [1,D,F*S] expert
+    if cfg.n_shared_experts:
+        sh = _expert_ffn(params["sh_gate"], params["sh_up"], params["sh_down"],
+                         xt[None], cfg.mlp_type)
+        y = y + sh[0]
+
+    # ---- aux losses ----
+    density = jnp.mean(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32),
+                       axis=(0, 1))                 # fraction routed per e
+    mean_prob = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(density * mean_prob)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2)
+    return y.reshape(B, T, D).astype(x.dtype), {
+        "lb_loss": lb_loss, "z_loss": z_loss}
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 7)
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    out_scale = 1.0 / (2 * cfg.n_layers) ** 0.5
+
+    def experts(k, d_in, d_out, scale=1.0):
+        std = scale / jnp.sqrt(d_in)
+        return (jax.random.truncated_normal(k, -2, 2, (E, d_in, d_out)) *
+                std).astype(dtype)
+
+    p = {"router": init_dense(ks[0], D, E, dtype=jnp.float32),
+         "w_up": experts(ks[1], D, F),
+         "w_gate": experts(ks[2], D, F) if gated else
+         jnp.zeros((E, 1, 1), dtype),
+         "w_down": experts(ks[3], F, D, out_scale)}
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        p["sh_up"] = init_dense(ks[4], D, Fs, dtype=dtype)[None]
+        p["sh_gate"] = init_dense(ks[5], D, Fs, dtype=dtype)[None]
+        p["sh_down"] = init_dense(ks[6], Fs, D, scale=out_scale,
+                                  dtype=dtype)[None]
+    return p

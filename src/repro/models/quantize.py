@@ -1,0 +1,65 @@
+"""Offline weight quantization for serving (paper deployment + §Perf iter:
+pre-quantized int8 weights quarter the per-layer FSDP weight-gather bytes
+vs gathering f32 masters and quantizing in-step).
+
+`quantize_params` replaces every matmul weight leaf `w` with
+{"q": int8 codes, "s": f32 per-output-channel scales}; scan slicing, pjit
+sharding and checkpointing all treat the dict as an ordinary pytree.
+Excluded: embeddings/lm_head (the paper leaves boundary layers intact),
+norms/vectors, routers (routing precision), 4-D stacked MoE expert banks
+(einsum path — quantized via the activation side only), conv kernels.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import quantize, weight_scale
+
+_QUANT_KEYS = (
+    "wq", "wk", "wv", "wo", "w_up", "w_gate", "w_down",
+    "w_r", "w_k", "w_v", "w_g", "w_o", "w_ck", "w_cr", "w_cv",
+    "w_dkv", "w_uk", "w_uv", "w_y", "w_x", "w_a", "w_i", "w_out",
+)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", getattr(entry, "name", None))
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def quantize_params(params: Any, weight_bits: int = 8) -> Any:
+    """Float param tree -> serving tree with int8 weight codes."""
+    def q(path, leaf):
+        name = _leaf_name(path)
+        if name not in _QUANT_KEYS or leaf.ndim not in (2, 3):
+            return leaf
+        if leaf.ndim == 2:
+            qs = weight_scale(leaf, weight_bits)
+            return {"q": quantize(leaf, qs).astype(jnp.int8),
+                    "s": qs.scale.astype(jnp.float32)}
+        # stacked [L, din, dout]: per-layer per-channel scales [L, dout]
+        qs_scale = jnp.max(jnp.abs(leaf), axis=1) / \
+            ((1 << (weight_bits - 1)) - 1)
+        qs_scale = jnp.maximum(qs_scale, 1e-8)
+        codes = jnp.clip(jnp.round(leaf / qs_scale[:, None, :]),
+                         -127, 127).astype(jnp.int8)
+        return {"q": codes, "s": qs_scale.astype(jnp.float32)}
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def is_qweight(w) -> bool:
+    return isinstance(w, dict) and "q" in w and "s" in w
+
+
+def as_weight(w, dtype) -> jnp.ndarray:
+    """Dequantize a (possibly) quantized weight leaf to a float array."""
+    if is_qweight(w):
+        return (w["q"].astype(jnp.float32) * w["s"]).astype(dtype)
+    return w.astype(dtype)

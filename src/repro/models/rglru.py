@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin): causal depthwise conv
++ gated linear recurrence, parallelized with jax.lax.associative_scan
+(the recurrence is elementwise-linear, so the Blelloch scan is exact),
+plus the 1:2 local-attention:recurrent hybrid pattern assembled in
+transformer.py.
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(L) * sigmoid(W_a x_t)),  c = 8.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, QuantCtx, dense, init_dense
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jnp.ndarray          # [B, W] recurrence state
+    conv: jnp.ndarray       # [B, conv_width-1, W] trailing conv inputs
+
+
+def _causal_conv(x, kernel, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv via shifted adds. x [B,T,C], kernel [W,C].
+    cache: [B, W-1, C] trailing context from previous call (decode)."""
+    W = kernel.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)      # [B, T+W-1, C]
+    T = x.shape[1]
+    out = jnp.zeros_like(x)
+    for w in range(W):
+        out = out + xp[:, w:w + T] * kernel[w].astype(x.dtype)
+    new_cache = xp[:, -(W - 1):] if W > 1 else pad
+    return out, new_cache
+
+
+def _lru_scan(a, bx, h0, impl: str):
+    """h_t = a_t h_{t-1} + bx_t, elementwise over [B,T,C]."""
+    if impl == "scan":
+        def step(h, inp):
+            a_t, b_t = inp
+            h = a_t * h + b_t
+            return h, h
+        h_last, hs = jax.lax.scan(
+            step, h0, (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+        return hs.swapaxes(0, 1), h_last
+    # associative scan: compose (a2*a1, a2*b1 + b2); fold h0 into first b
+    b0 = bx.at[:, 0].add(a[:, 0] * h0) if h0 is not None else bx
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b0), axis=1)
+    return bb, bb[:, -1]
+
+
+def rglru_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                cache: Optional[RGLRUCache] = None,
+                mode: str = "train",
+                ctx: Optional[QuantCtx] = None):
+    """Full recurrent sub-block: in-proj (x & gate branches) -> conv ->
+    RG-LRU -> gated out-proj. Returns (out, new_cache)."""
+    from repro.distributed.sharding import constrain_last
+    B, T, D = x.shape
+    gate = jax.nn.gelu(dense(params["w_y"], x, "rg_gate", ctx),
+                       approximate=True)
+    xb = constrain_last(dense(params["w_x"], x, "rg_in", ctx))
+    xb, conv_cache = _causal_conv(
+        xb, params["conv_k"], cache.conv if cache is not None else None)
+    r = jax.nn.sigmoid(constrain_last(
+        dense(params["w_a"], xb, "rg_rgate", ctx)).astype(jnp.float32))
+    i = jax.nn.sigmoid(constrain_last(
+        dense(params["w_i"], xb, "rg_igate", ctx)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = i * xb.astype(jnp.float32)
+    bx = constrain_last(
+        jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x)
+    h0 = cache.h.astype(jnp.float32) if cache is not None else \
+        jnp.zeros((B, xb.shape[-1]), jnp.float32)
+    impl = "scan" if (mode == "decode" or cfg.mixer_impl == "scan") \
+        else "assoc"
+    hs, h_last = _lru_scan(a, bx, h0, impl)
+    hs = hs.astype(x.dtype)
+    out = dense(params["w_out"], hs * gate, "rg_out", ctx)
+    new_cache = RGLRUCache(h=h_last.astype(x.dtype), conv=conv_cache) \
+        if (cache is not None or mode != "train") else None
+    return out, new_cache
+
+
+def rglru_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    D, W = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "w_y": init_dense(ks[0], D, W, dtype=dtype),
+        "w_x": init_dense(ks[1], D, W, dtype=dtype),
+        "w_a": init_dense(ks[2], W, W, scale=0.1, dtype=dtype),
+        "w_i": init_dense(ks[3], W, W, scale=0.1, dtype=dtype),
+        "w_out": init_dense(ks[4], W, D,
+                            scale=1.0 / (2 * cfg.n_layers) ** 0.5,
+                            dtype=dtype),
+        "conv_k": (jax.random.truncated_normal(
+            ks[5], -2, 2, (cfg.conv_width, W)) * 0.1).astype(dtype),
+        # Lambda init so a ~ U(0.9, 0.999)^c-ish (Griffin appendix)
+        "lam": jnp.full((W,), 0.65, jnp.float32),
+    }
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> RGLRUCache:
+    W = cfg.lru_width or cfg.d_model
+    return RGLRUCache(
+        h=jnp.zeros((batch, W), dtype),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, W), dtype))

@@ -1,0 +1,206 @@
+"""RWKV6 "Finch": attention-free time-mix with data-dependent decay, plus
+squared-ReLU channel-mix (whose genuinely sparse unsigned activations are
+the best match in the zoo for the paper's vSPARQ assumptions — DESIGN.md §4).
+
+Two sequence-mixer implementations, selected by cfg.mixer_impl:
+  scan     — O(T) lax.scan oracle (exact recurrence, used by tests/decode);
+  chunked  — FLA-style chunked parallel form: intra-chunk work becomes
+             matmuls (MXU-aligned), inter-chunk state flows through a short
+             scan. Decays are factorized around the chunk start; per-step
+             log-decay is clamped to >= -5 so the largest factor within a
+             16..64-step chunk stays inside f32 range.
+
+Simplification vs the full Finch recipe (documented in DESIGN.md): token
+shift uses static per-channel interpolation (mu) for r/k/v/g; the decay w
+keeps its *data-dependent* LoRA (w0 + tanh(x A) B), which is the paper-pool
+note ("data-dependent decay").
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, QuantCtx, dense, init_dense
+
+LOG_DECAY_FLOOR = -5.0
+
+
+class RWKVCache(NamedTuple):
+    state: jnp.ndarray      # [B, H, hs, hs] wkv state
+    tm_last: jnp.ndarray    # [B, D] last input of time-mix (token shift)
+    cm_last: jnp.ndarray    # [B, D] last input of channel-mix
+
+
+def _token_shift(x, mu, last=None):
+    """lerp(x, prev_token(x), mu). x [B,T,D]; last [B,D] or None."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None], x[:, :-1]], 1)
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def _heads(x, hs):
+    B, T, D = x.shape
+    return x.reshape(B, T, D // hs, hs)
+
+
+def _log_decay(params, xw, ctx):
+    """Data-dependent decay: logw = w0 + tanh(xw A) B; per-step log decay
+    = -exp(logw), clamped for the chunked form's f32 safety."""
+    lora = jnp.matmul(jnp.tanh(jnp.matmul(xw, params["w_A"].astype(xw.dtype))),
+                      params["w_B"].astype(xw.dtype))
+    logw = params["w0"].astype(xw.dtype) + lora
+    return jnp.clip(-jnp.exp(logw.astype(jnp.float32)), LOG_DECAY_FLOOR, -1e-4)
+
+
+def _wkv_scan(r, k, v, logw, u, state0):
+    """Exact recurrence. r/k/v [B,T,H,hs], logw [B,T,H,hs] (log decay per
+    key channel), u [H,hs]. Returns (y [B,T,H,hs], state [B,H,hs,hs])."""
+    w = jnp.exp(logw)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,hs]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S) + \
+            jnp.einsum("bhi,bhi,bhj->bhj", r_t, u[None] * k_t, v_t)
+        S = w_t[..., None] * S + k_t[..., None] * v_t[..., None, :]
+        return S, y
+
+    seq = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+           w.swapaxes(0, 1).astype(r.dtype))
+    state, ys = jax.lax.scan(step, state0.astype(r.dtype), seq)
+    return ys.swapaxes(0, 1), state
+
+
+def _wkv_chunked(r, k, v, logw, u, state0, chunk):
+    """Chunked parallel form (see module docstring)."""
+    B, T, H, hs = r.shape
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        # zero k/v inject nothing; zero log-decay passes state through, so
+        # trailing pad steps leave real outputs and the final state exact.
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, logw = (jnp.pad(a, z) for a in (r, k, v, logw))
+        T += pad
+    n = T // C
+    f32 = jnp.float32
+    rc = r.reshape(B, n, C, H, hs).astype(f32)
+    kc = k.reshape(B, n, C, H, hs).astype(f32)
+    vc = v.reshape(B, n, C, H, hs).astype(f32)
+    lw = logw.reshape(B, n, C, H, hs).astype(f32)
+    cum = jnp.cumsum(lw, axis=2)                 # inclusive cumsum in-chunk
+    cum_prev = cum - lw                          # cumsum up to t-1
+    r_t = rc * jnp.exp(cum_prev)                 # r~_t = r_t * exp(cum[t-1])
+    k_t = kc * jnp.exp(-cum)                     # k~_s = k_s * exp(-cum[s])
+    k_end = kc * jnp.exp(cum[:, :, -1:] - cum)   # decay from s to chunk end
+    a_end = jnp.exp(cum[:, :, -1])               # [B,n,H,hs] total decay
+
+    # intra-chunk: scores[t,s] = (r~_t . k~_s) for s<t; + u-bonus diagonal
+    scores = jnp.einsum("bnthi,bnshi->bnhts", r_t, k_t)
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhts,bnshj->bnthj", scores, vc)
+    bonus = jnp.einsum("bnthi,hi,bnthi->bnth", rc, u.astype(f32), kc)
+    y_intra += bonus[..., None] * vc
+
+    # per-chunk state outer products to inject at chunk boundaries
+    inject = jnp.einsum("bnshi,bnshj->bnhij", k_end, vc)  # [B,n,H,hs,hs]
+
+    def boundary(S, inp):
+        a_e, inj = inp                            # [B,H,hs], [B,H,hs,hs]
+        S_next = a_e[..., None] * S + inj
+        return S_next, S                          # emit state *entering* chunk
+
+    (state, S_in) = jax.lax.scan(
+        boundary, state0.astype(f32),
+        (a_end.swapaxes(0, 1), inject.swapaxes(0, 1)))
+    S_in = S_in.swapaxes(0, 1)                    # [B,n,H,hs,hs]
+    y_state = jnp.einsum("bnthi,bnhij->bnthj", r_t, S_in)
+    y = (y_intra + y_state).reshape(B, T, H, hs)
+    if pad:
+        y = y[:, :T - pad]
+    return y.astype(r.dtype), state.astype(r.dtype)
+
+
+def time_mix(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+             cache: Optional[RWKVCache] = None, mode: str = "train",
+             ctx: Optional[QuantCtx] = None):
+    B, T, D = x.shape
+    hs = cfg.head_size
+    H = D // hs
+    last = cache.tm_last if cache is not None else None
+    xr = _token_shift(x, params["mu_r"], last)
+    xk = _token_shift(x, params["mu_k"], last)
+    xv = _token_shift(x, params["mu_v"], last)
+    xw = _token_shift(x, params["mu_w"], last)
+    xg = _token_shift(x, params["mu_g"], last)
+    from repro.distributed.sharding import constrain_heads
+    r = constrain_heads(_heads(dense(params["w_r"], xr, "tm_r", ctx), hs))
+    k = constrain_heads(_heads(dense(params["w_k"], xk, "tm_k", ctx), hs))
+    v = constrain_heads(_heads(dense(params["w_v"], xv, "tm_v", ctx), hs))
+    g = jax.nn.silu(dense(params["w_g"], xg, "tm_g", ctx))
+    logw = constrain_heads(_heads(_log_decay(params, xw, ctx), hs))
+    u = params["u"].reshape(H, hs)
+    state0 = cache.state if cache is not None else \
+        jnp.zeros((B, H, hs, hs), x.dtype)
+    if mode == "decode" or cfg.mixer_impl == "scan":
+        y, state = _wkv_scan(r, k, v, logw, u, state0)
+    else:
+        y, state = _wkv_chunked(r, k, v, logw, u, state0, cfg.mixer_chunk)
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, -1, keepdims=True)
+    var = jnp.var(yf, -1, keepdims=True)
+    yf = (yf - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (yf.reshape(B, T, D) * params["ln_x_scale"] +
+         params["ln_x_bias"]).astype(x.dtype)
+    out = dense(params["w_o"], y * g, "tm_out", ctx)
+    new_cache = RWKVCache(state=state, tm_last=x[:, -1],
+                          cm_last=cache.cm_last if cache is not None else
+                          jnp.zeros((B, D), x.dtype)) \
+        if cache is not None or mode != "train" else None
+    return out, new_cache
+
+
+def channel_mix(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                last: Optional[jnp.ndarray] = None,
+                ctx: Optional[QuantCtx] = None):
+    xk = _token_shift(x, params["mu_ck"], last)
+    xr = _token_shift(x, params["mu_cr"], last)
+    k = jnp.square(jax.nn.relu(dense(params["w_ck"], xk, "cm_k", ctx)))
+    r = jax.nn.sigmoid(dense(params["w_cr"], xr, "cm_r", ctx))
+    # k is post-relu^2: genuinely sparse unsigned input to cm_v (paper mode)
+    return r * dense(params["w_cv"], k, "cm_v", ctx)
+
+
+def rwkv_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 10)
+    D, F = cfg.d_model, cfg.d_ff
+    la = cfg.decay_lora
+    mus = {f"mu_{n}": jnp.full((D,), 0.5, jnp.float32)
+           for n in ("r", "k", "v", "w", "g")}
+    mus.update({"mu_ck": jnp.full((D,), 0.5, jnp.float32),
+                "mu_cr": jnp.full((D,), 0.5, jnp.float32)})
+    return {
+        **mus,
+        "w_r": init_dense(ks[0], D, D, dtype=dtype),
+        "w_k": init_dense(ks[1], D, D, dtype=dtype),
+        "w_v": init_dense(ks[2], D, D, dtype=dtype),
+        "w_g": init_dense(ks[3], D, D, dtype=dtype),
+        "w_o": init_dense(ks[4], D, D,
+                          scale=1.0 / (2 * cfg.n_layers) ** 0.5, dtype=dtype),
+        "w_A": init_dense(ks[5], D, la, dtype=dtype),
+        "w_B": (jax.random.truncated_normal(ks[6], -2, 2, (la, D)) *
+                0.01).astype(dtype),
+        "w0": jnp.full((D,), -1.0, jnp.float32),  # exp(-exp(-1)) ~ 0.69 decay
+        "u": jnp.zeros((D,), jnp.float32),
+        "ln_x_scale": jnp.ones((D,), jnp.float32),
+        "ln_x_bias": jnp.zeros((D,), jnp.float32),
+        "w_ck": init_dense(ks[7], D, F, dtype=dtype),
+        "w_cr": init_dense(ks[8], D, D, dtype=dtype),
+        "w_cv": init_dense(ks[9], F, D,
+                           scale=1.0 / (2 * cfg.n_layers) ** 0.5, dtype=dtype),
+    }

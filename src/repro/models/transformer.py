@@ -1,0 +1,405 @@
+"""Block assembly and layer stacking for all 10 architectures.
+
+One generic `block_apply` dispatches on a *kind* string; homogeneous runs
+of layers execute under jax.lax.scan with stacked params (+ stacked caches
+and stacked per-layer quant scales as scan xs), wrapped in jax.checkpoint
+for training remat. Heterogeneous stacks (deepseek's first dense layer,
+recurrentgemma's (rec, rec, attn) pattern tail) unroll only the leftovers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.attention import KVCache
+from repro.models.common import ModelConfig, QuantCtx, norm, norm_init
+from repro.models.quantize import as_weight
+
+
+class RingKVCache(NamedTuple):
+    """Sliding-window KV ring buffer (local attention decode)."""
+    k: jnp.ndarray          # [B, W, KV, hd]
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray   # [B, W] absolute position per slot (-1 empty)
+    pos: jnp.ndarray        # scalar: next absolute position
+
+
+def ring_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> RingKVCache:
+    W = cfg.local_window
+    shape = (batch, W, cfg.n_kv_heads, cfg.head_dim)
+    return RingKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                       jnp.full((batch, W), -1, jnp.int32),
+                       jnp.zeros((), jnp.int32))
+
+
+def ring_insert(cache: RingKVCache, k_new, v_new) -> RingKVCache:
+    """Insert T_new tokens (T_new <= W) at rolling slots."""
+    B, T_new = k_new.shape[0], k_new.shape[1]
+    W = cache.k.shape[1]
+    slots = (cache.pos + jnp.arange(T_new)) % W
+    k = cache.k.at[:, slots].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[:, slots].set(v_new.astype(cache.v.dtype))
+    sp = cache.slot_pos.at[:, slots].set(
+        (cache.pos + jnp.arange(T_new))[None, :])
+    return RingKVCache(k, v, sp, cache.pos + T_new)
+
+
+def ring_decode_attention(q, cache: RingKVCache, window: int):
+    """q [B,1,H,hd] against the ring. Mask by per-slot absolute position."""
+    B, _, H, hd = q.shape
+    KV = cache.k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache.k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    cur = cache.pos - 1  # position of the token being decoded
+    ok = (cache.slot_pos >= 0) & (cache.slot_pos <= cur) & \
+         (cache.slot_pos > cur - window)
+    s = jnp.where(ok[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(cache.v.dtype), cache.v)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# block init / apply, dispatched on kind
+# ----------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, kind: str, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+    nt, d = cfg.norm_type, cfg.d_model
+    if kind == "dense":
+        return {"ln1": norm_init(d, nt),
+                "attn": attn_mod.attention_init(ks[0], cfg, dtype),
+                "ln2": norm_init(d, nt),
+                "ffn": ffn_mod.ffn_init(ks[1], d, cfg.d_ff, cfg.mlp_type,
+                                        cfg.n_layers, dtype)}
+    if kind == "moe":
+        return {"ln1": norm_init(d, nt),
+                "attn": attn_mod.attention_init(ks[0], cfg, dtype),
+                "ln2": norm_init(d, nt),
+                "moe": moe_mod.moe_init(ks[1], cfg, dtype)}
+    if kind == "mla_dense":
+        return {"ln1": norm_init(d, nt),
+                "attn": mla_mod.mla_init(ks[0], cfg, dtype),
+                "ln2": norm_init(d, nt),
+                "ffn": ffn_mod.ffn_init(ks[1], d, cfg.d_ff, cfg.mlp_type,
+                                        cfg.n_layers, dtype)}
+    if kind == "mla_moe":
+        return {"ln1": norm_init(d, nt),
+                "attn": mla_mod.mla_init(ks[0], cfg, dtype),
+                "ln2": norm_init(d, nt),
+                "moe": moe_mod.moe_init(ks[1], cfg, dtype)}
+    if kind == "rwkv":
+        return {"ln1": norm_init(d, nt),
+                "ln2": norm_init(d, nt),
+                **rwkv_mod.rwkv_block_init(ks[0], cfg, dtype)}
+    if kind == "rg_rec":
+        return {"ln1": norm_init(d, nt),
+                "rec": rg_mod.rglru_init(ks[0], cfg, dtype),
+                "ln2": norm_init(d, nt),
+                "ffn": ffn_mod.ffn_init(ks[1], d, cfg.d_ff, "geglu",
+                                        cfg.n_layers, dtype)}
+    if kind == "rg_attn":
+        return {"ln1": norm_init(d, nt),
+                "attn": attn_mod.attention_init(ks[0], cfg, dtype),
+                "ln2": norm_init(d, nt),
+                "ffn": ffn_mod.ffn_init(ks[1], d, cfg.d_ff, "geglu",
+                                        cfg.n_layers, dtype)}
+    if kind == "enc":
+        return {"ln1": norm_init(d, nt),
+                "attn": attn_mod.attention_init(ks[0], cfg, dtype),
+                "ln2": norm_init(d, nt),
+                "ffn": ffn_mod.ffn_init(ks[1], d, cfg.d_ff, cfg.mlp_type,
+                                        cfg.n_layers, dtype)}
+    if kind == "dec":
+        return {"ln1": norm_init(d, nt),
+                "attn": attn_mod.attention_init(ks[0], cfg, dtype),
+                "ln_x": norm_init(d, nt),
+                "xattn": attn_mod.attention_init(ks[1], cfg, dtype),
+                "ln2": norm_init(d, nt),
+                "ffn": ffn_mod.ffn_init(ks[2], d, cfg.d_ff, cfg.mlp_type,
+                                        cfg.n_layers, dtype)}
+    raise ValueError(kind)
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if kind in ("dense", "moe", "enc"):
+        return attn_mod.cache_init(cfg, batch, max_len, dtype)
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.mla_cache_init(cfg, batch, max_len, dtype)
+    if kind == "rwkv":
+        H = cfg.d_model // cfg.head_size
+        return rwkv_mod.RWKVCache(
+            state=jnp.zeros((batch, H, cfg.head_size, cfg.head_size), dtype),
+            tm_last=jnp.zeros((batch, cfg.d_model), dtype),
+            cm_last=jnp.zeros((batch, cfg.d_model), dtype))
+    if kind == "rg_rec":
+        return rg_mod.rglru_cache_init(cfg, batch, dtype)
+    if kind == "rg_attn":
+        return ring_init(cfg, batch, dtype)
+    if kind == "dec":
+        # self-attention cache + cross k/v (filled at prefill)
+        return {"self": attn_mod.cache_init(cfg, batch, max_len, dtype),
+                "cross_k": jnp.zeros(
+                    (batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "cross_v": jnp.zeros(
+                    (batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)}
+    raise ValueError(kind)
+
+
+def _res(x, y):
+    return x + y.astype(x.dtype)
+
+
+def block_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig, kind: str, *,
+                positions: jnp.ndarray,
+                cache=None,
+                mode: str = "train",
+                ctx: Optional[QuantCtx] = None,
+                prefix_len: int = 0,
+                enc_out: Optional[jnp.ndarray] = None):
+    """Returns (x, new_cache, aux) — aux carries MoE losses (or {})."""
+    from repro.distributed.sharding import constrain_batch
+    aux = {}
+    nt, eps = cfg.norm_type, cfg.norm_eps
+
+    if kind in ("dense", "moe", "rg_attn", "enc"):
+        window = cfg.local_window if kind == "rg_attn" else 0
+        h = constrain_batch(norm(params["ln1"], x, nt, eps))
+        if kind == "rg_attn" and mode == "decode":
+            q, k, v = attn_mod.qkv_proj(params["attn"], h, cfg, positions, ctx)
+            cache = ring_insert(cache, k, v)
+            o = ring_decode_attention(q, cache, window)
+            o = jnp.matmul(o.reshape(*o.shape[:2], -1),
+                           as_weight(params["attn"]["wo"], x.dtype))
+            new_cache = cache
+        elif kind == "rg_attn" and mode == "prefill":
+            q, k, v = attn_mod.qkv_proj(params["attn"], h, cfg, positions, ctx)
+            o = attn_mod.local_attention(q, k, v, window=window)
+            o = jnp.matmul(o.reshape(*o.shape[:2], -1),
+                           as_weight(params["attn"]["wo"], x.dtype))
+            # fill the ring with the last W tokens at their absolute slots
+            W = min(window, k.shape[1])
+            primed = cache._replace(
+                pos=jnp.asarray(k.shape[1] - W, jnp.int32))
+            new_cache = ring_insert(primed, k[:, -W:], v[:, -W:])
+        else:
+            if kind == "enc" and mode != "decode":
+                o = attn_mod.flash_attention(
+                    *attn_mod.qkv_proj(params["attn"], h, cfg, positions, ctx),
+                    causal=False, q_chunk=cfg.attn_chunk,
+                    kv_chunk=cfg.attn_chunk)
+                o = jnp.matmul(o.reshape(*o.shape[:2], -1),
+                               as_weight(params["attn"]["wo"], x.dtype))
+                new_cache = cache
+            else:
+                o, new_cache = attn_mod.attention_block(
+                    params["attn"], h, cfg, positions=positions, cache=cache,
+                    mode=mode, window=window, prefix_len=prefix_len, ctx=ctx)
+        x = _res(x, o)
+        h = constrain_batch(norm(params["ln2"], x, nt, eps))
+        if kind == "moe":
+            o, aux = moe_mod.moe_apply(params["moe"], h, cfg, ctx,
+                                       exact_capacity=(mode == "decode"))
+        else:
+            o = ffn_mod.ffn_apply(params["ffn"], h, cfg.mlp_type
+                                  if kind != "rg_attn" else "geglu", ctx)
+        x = _res(x, o)
+        return x, new_cache, aux
+
+    if kind in ("mla_dense", "mla_moe"):
+        h = constrain_batch(norm(params["ln1"], x, nt, eps))
+        o, new_cache = mla_mod.mla_block(
+            params["attn"], h, cfg, positions=positions, cache=cache,
+            mode=mode, ctx=ctx)
+        x = _res(x, o)
+        h = constrain_batch(norm(params["ln2"], x, nt, eps))
+        if kind == "mla_moe":
+            o, aux = moe_mod.moe_apply(params["moe"], h, cfg, ctx,
+                                       exact_capacity=(mode == "decode"))
+        else:
+            o = ffn_mod.ffn_apply(params["ffn"], h, cfg.mlp_type, ctx)
+        x = _res(x, o)
+        return x, new_cache, aux
+
+    if kind == "rwkv":
+        h = constrain_batch(norm(params["ln1"], x, nt, eps))
+        o, new_cache = rwkv_mod.time_mix(params, h, cfg, cache=cache,
+                                         mode=mode, ctx=ctx)
+        x = _res(x, o)
+        h = constrain_batch(norm(params["ln2"], x, nt, eps))
+        cm_last = cache.cm_last if cache is not None else None
+        o = rwkv_mod.channel_mix(params, h, cfg, last=cm_last, ctx=ctx)
+        if new_cache is not None:
+            new_cache = new_cache._replace(cm_last=h[:, -1])
+        x = _res(x, o)
+        return x, new_cache, aux
+
+    if kind == "rg_rec":
+        h = constrain_batch(norm(params["ln1"], x, nt, eps))
+        o, new_cache = rg_mod.rglru_block(params["rec"], h, cfg, cache=cache,
+                                          mode=mode, ctx=ctx)
+        x = _res(x, o)
+        h = constrain_batch(norm(params["ln2"], x, nt, eps))
+        x = _res(x, ffn_mod.ffn_apply(params["ffn"], h, "geglu", ctx))
+        return x, new_cache, aux
+
+    if kind == "dec":
+        h = constrain_batch(norm(params["ln1"], x, nt, eps))
+        o, self_cache = attn_mod.attention_block(
+            params["attn"], h, cfg, positions=positions,
+            cache=cache["self"] if cache else None, mode=mode, ctx=ctx)
+        x = _res(x, o)
+        h = constrain_batch(norm(params["ln_x"], x, nt, eps))
+        # cross-attention: K/V from encoder output (cached after prefill)
+        if mode == "train" or enc_out is not None:
+            ck = attn_mod._split_heads(
+                jnp.matmul(enc_out, as_weight(params["xattn"]["wk"], x.dtype)),
+                cfg.n_kv_heads)
+            cv = attn_mod._split_heads(
+                jnp.matmul(enc_out, as_weight(params["xattn"]["wv"], x.dtype)),
+                cfg.n_kv_heads)
+        else:
+            ck, cv = cache["cross_k"], cache["cross_v"]
+        q = attn_mod._split_heads(
+            jnp.matmul(h, as_weight(params["xattn"]["wq"], x.dtype)), cfg.n_heads)
+        if mode == "decode":
+            o = attn_mod.decode_attention(
+                q, attn_mod.KVCache(ck, cv,
+                                    jnp.asarray(ck.shape[1], jnp.int32)))
+        else:
+            o = attn_mod.flash_attention(q, ck, cv, causal=False,
+                                         q_chunk=cfg.attn_chunk,
+                                         kv_chunk=cfg.attn_chunk)
+        o = jnp.matmul(o.reshape(*o.shape[:2], -1),
+                       as_weight(params["xattn"]["wo"], x.dtype))
+        x = _res(x, o)
+        h = constrain_batch(norm(params["ln2"], x, nt, eps))
+        x = _res(x, ffn_mod.ffn_apply(params["ffn"], h, cfg.mlp_type, ctx))
+        new_cache = None
+        if cache is not None:
+            new_cache = {"self": self_cache, "cross_k": ck, "cross_v": cv}
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------
+# layer stacks: scan over homogeneous runs
+# ----------------------------------------------------------------------
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    """Per-layer kind list for the decoder stack."""
+    fam = cfg.family
+    if fam == "dense" or fam == "vlm":
+        return ["dense"] * cfg.n_layers
+    if fam == "moe":
+        if cfg.kv_lora_rank:
+            kinds = ["mla_dense"] * cfg.first_dense_layers
+            kinds += ["mla_moe"] * (cfg.n_layers - cfg.first_dense_layers)
+            return kinds
+        return ["moe"] * cfg.n_layers
+    if fam == "rwkv6":
+        return ["rwkv"] * cfg.n_layers
+    if fam == "rglru":
+        pattern = cfg.block_pattern or ("rg_rec", "rg_rec", "rg_attn")
+        return [pattern[i % len(pattern)] for i in range(cfg.n_layers)]
+    if fam == "encdec":
+        return ["dec"] * cfg.n_layers
+    raise ValueError(fam)
+
+
+def stack_init(key, cfg: ModelConfig, kinds: list[str],
+               dtype=jnp.float32) -> list:
+    """Group consecutive same-kind layers; stack each group's params.
+    Returns a list of stacked param pytrees (pure arrays — the (kind, count)
+    metadata lives in Model.groups_meta, outside the jitted tree)."""
+    out = []
+    for i, (kind, count) in enumerate(_group_runs(kinds)):
+        keys = jax.random.split(jax.random.fold_in(key, i), count)
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[block_init(k, cfg, kind, dtype) for k in keys])
+        out.append(stacked)
+    return out
+
+
+def _group_runs(kinds: list[str]) -> list[tuple[str, int]]:
+    groups = []
+    for k in kinds:
+        if groups and groups[-1][0] == k:
+            groups[-1] = (k, groups[-1][1] + 1)
+        else:
+            groups.append((k, 1))
+    return groups
+
+
+def stack_cache_init(cfg: ModelConfig, kinds: list[str], batch: int,
+                     max_len: int, dtype=jnp.bfloat16) -> list:
+    out = []
+    for kind, count in _group_runs(kinds):
+        one = block_cache_init(cfg, kind, batch, max_len, dtype)
+        out.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (count,) + x.shape).copy()
+            if x.ndim else jnp.broadcast_to(x, (count,)).copy(), one))
+    return out
+
+
+def stack_apply(groups_meta: list, blocks: list, x: jnp.ndarray,
+                cfg: ModelConfig, *,
+                positions: jnp.ndarray,
+                caches: Optional[list] = None,
+                mode: str = "train",
+                ctx: Optional[QuantCtx] = None,
+                scales_groups: Optional[list] = None,
+                prefix_len: int = 0,
+                enc_out: Optional[jnp.ndarray] = None):
+    """Apply every layer group with lax.scan. groups_meta is the static
+    [(kind, count)] list; blocks the parallel stacked-params list.
+    Returns (x, new_caches, aux)."""
+    new_caches = []
+    lb = jnp.float32(0)
+    zl = jnp.float32(0)
+    for gi, ((kind, count), stacked) in enumerate(zip(groups_meta, blocks)):
+        cache_g = caches[gi] if caches is not None else None
+        scales_g = scales_groups[gi] if scales_groups is not None else None
+
+        def body(carry, xs, kind=kind):
+            from repro.distributed.sharding import constrain
+            h, lb_a, zl_a = carry
+            p_l, cache_l, scales_l = xs
+            bctx = ctx
+            if ctx is not None and scales_l is not None:
+                bctx = dataclasses.replace(ctx, scales=scales_l)
+            h, new_cache_l, aux = block_apply(
+                p_l, h, cfg, kind, positions=positions, cache=cache_l,
+                mode=mode, ctx=bctx, prefix_len=prefix_len, enc_out=enc_out)
+            h = constrain(h)  # pin residual stream (DP/SP) at layer boundary
+            lb_a += aux.get("lb_loss", 0.0)
+            zl_a += aux.get("z_loss", 0.0)
+            return (h, lb_a, zl_a), new_cache_l
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+        xs = (stacked, cache_g, scales_g)
+        if count == 1:
+            sq = jax.tree.map(lambda a: a[0], (stacked, cache_g, scales_g))
+            (x, lb, zl), nc = body((x, lb, zl), sq)
+            new_caches.append(jax.tree.map(lambda a: a[None], nc))
+        else:
+            (x, lb, zl), nc = jax.lax.scan((lambda c, s: body(c, s)),
+                                           (x, lb, zl), xs)
+            new_caches.append(nc)
+    return x, new_caches, {"lb_loss": lb, "z_loss": zl}

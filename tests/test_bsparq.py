@@ -1,0 +1,153 @@
+"""Bit-exact tests of bSPARQ against the paper's worked examples (§3.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bsparq import bsparq_encode, bsparq_recon, bsparq_recon_signed, shifts_for
+from repro.core.bitops import msb_pos, select_shift
+
+
+def enc(x, n, opts, rounding=False):
+    q, s = bsparq_encode(jnp.asarray([x]), n, shifts_for(n, opts), rounding)
+    return int(q[0]), int(s[0])
+
+
+def recon(x, n, opts, rounding=False):
+    return int(bsparq_recon(jnp.asarray([x]), n, shifts_for(n, opts), rounding)[0])
+
+
+class TestPaperExamples:
+    """Every worked example in §3.1 of the paper."""
+
+    def test_27_5opt_window(self):
+        # 00011011b = 27: 5opt places the window at bits [4:1] -> 1101b,
+        # shift 1, approximated value 26.
+        q, s = enc(27, 4, 5)
+        assert (q, s) == (0b1101, 1)
+        assert recon(27, 4, 5) == 26
+
+    def test_27_3opt_window(self):
+        # 3opt chooses bits [5:2] -> 000110b window value 6, shift 2 -> 24.
+        q, s = enc(27, 4, 3)
+        assert (q, s) == (0b0110, 2)
+        assert recon(27, 4, 3) == 24
+
+    def test_27_2opt_window(self):
+        # 2opt chooses bits [7:4] -> 0001b, shift 4 -> 16.
+        q, s = enc(27, 4, 2)
+        assert (q, s) == (0b0001, 4)
+        assert recon(27, 4, 2) == 16
+
+    def test_33_5opt_region(self):
+        # §3.1: 33 = 00100001b maps to the region scaled by 2^2 in 5opt.
+        q, s = enc(33, 4, 5)
+        assert s == 2
+        assert q == 0b1000
+        assert recon(33, 4, 5) == 32
+
+    def test_shift_sets(self):
+        assert shifts_for(4, 5) == (0, 1, 2, 3, 4)
+        assert shifts_for(4, 3) == (0, 2, 4)
+        assert shifts_for(4, 2) == (0, 4)
+        assert shifts_for(3, 6) == (0, 1, 2, 3, 4, 5)
+        assert shifts_for(2, 7) == (0, 1, 2, 3, 4, 5, 6)
+
+
+class TestRounding:
+    def test_rounding_27_5opt(self):
+        # residual LSB below window [4:1] is bit0=1 -> rounds 13 to 14 -> 28.
+        assert recon(27, 4, 5, rounding=True) == 28
+
+    def test_rounding_carry_reencode(self):
+        # 31 = 00011111b, 5opt window [4:1]=15, round bit 1 -> carry to 16,
+        # re-encoded exactly as 32 (single bit at position 5).
+        assert recon(31, 4, 5, rounding=True) == 32
+
+    def test_rounding_saturation(self):
+        # 255 -> round(255/16)=16 overflows the top window; saturates at 240.
+        assert recon(255, 4, 5, rounding=True) == 240
+
+    def test_zero(self):
+        for opts, n in [(5, 4), (3, 4), (2, 4), (6, 3), (7, 2)]:
+            assert recon(0, n, opts) == 0
+            assert recon(0, n, opts, rounding=True) == 0
+
+
+@st.composite
+def uint8s(draw):
+    return draw(st.integers(min_value=0, max_value=255))
+
+
+class TestProperties:
+    @given(st.lists(uint8s(), min_size=1, max_size=64))
+    @settings(max_examples=200, deadline=None)
+    def test_window_covers_msb_exact_small_values(self, xs):
+        """Values below 2**n are always exact under trim (window [n-1:0])."""
+        x = jnp.asarray(xs)
+        for n, opts in [(4, 5), (4, 3), (4, 2), (3, 6), (2, 7)]:
+            r = np.asarray(bsparq_recon(x, n, shifts_for(n, opts), False))
+            small = np.asarray(x) < (1 << n)
+            np.testing.assert_array_equal(r[small], np.asarray(x)[small])
+
+    @given(st.lists(uint8s(), min_size=1, max_size=64))
+    @settings(max_examples=200, deadline=None)
+    def test_more_opts_never_worse(self, xs):
+        """Trim error is monotone in placement options: 5opt <= 3opt <= 2opt."""
+        x = np.asarray(xs)
+        errs = {}
+        for opts in (5, 3, 2):
+            r = np.asarray(bsparq_recon(jnp.asarray(x), 4, shifts_for(4, opts), False))
+            errs[opts] = np.abs(x - r)
+        assert (errs[5] <= errs[3]).all()
+        assert (errs[3] <= errs[2]).all()
+
+    @given(st.lists(uint8s(), min_size=1, max_size=64))
+    @settings(max_examples=200, deadline=None)
+    def test_trim_underestimates(self, xs):
+        """Trim (no rounding) never overshoots: recon <= x, error < 2**shift_max."""
+        x = np.asarray(xs)
+        for n, opts in [(4, 5), (4, 3), (4, 2), (3, 6), (2, 7)]:
+            r = np.asarray(bsparq_recon(jnp.asarray(x), n, shifts_for(n, opts), False))
+            assert (r <= x).all()
+            assert (r >= 0).all()
+
+    @given(st.lists(uint8s(), min_size=4, max_size=256))
+    @settings(max_examples=100, deadline=None)
+    def test_rounding_mse_not_worse(self, xs):
+        """+R never increases total squared error (per-value it rounds to
+        nearest within the same window, carries re-encode exactly)."""
+        x = np.asarray(xs, dtype=np.int64)
+        for n, opts in [(4, 5), (4, 3), (4, 2)]:
+            sh = shifts_for(n, opts)
+            rt = np.asarray(bsparq_recon(jnp.asarray(x), n, sh, False), dtype=np.int64)
+            rr = np.asarray(bsparq_recon(jnp.asarray(x), n, sh, True), dtype=np.int64)
+            assert ((x - rr) ** 2).sum() <= ((x - rt) ** 2).sum()
+
+    @given(st.lists(st.integers(min_value=-127, max_value=127), min_size=1,
+                    max_size=64))
+    @settings(max_examples=100, deadline=None)
+    def test_signed_is_odd_function(self, xs):
+        x = jnp.asarray(xs)
+        for n, opts in [(4, 5), (4, 3)]:
+            sh = shifts_for(n, opts)
+            r_pos = np.asarray(bsparq_recon_signed(x, n, sh, True))
+            r_neg = np.asarray(bsparq_recon_signed(-x, n, sh, True))
+            np.testing.assert_array_equal(r_pos, -r_neg)
+
+
+class TestBitops:
+    def test_msb(self):
+        xs = jnp.asarray([0, 1, 2, 3, 4, 7, 8, 27, 128, 255])
+        np.testing.assert_array_equal(
+            np.asarray(msb_pos(xs)), [0, 0, 1, 1, 2, 2, 3, 4, 7, 7])
+
+    def test_select_shift_5opt(self):
+        m = jnp.asarray([0, 3, 4, 5, 6, 7])
+        np.testing.assert_array_equal(
+            np.asarray(select_shift(m, 4, (0, 1, 2, 3, 4))), [0, 0, 1, 2, 3, 4])
+
+    def test_select_shift_3opt(self):
+        m = jnp.asarray([0, 3, 4, 5, 6, 7])
+        np.testing.assert_array_equal(
+            np.asarray(select_shift(m, 4, (0, 2, 4))), [0, 0, 2, 2, 4, 4])

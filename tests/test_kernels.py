@@ -1,0 +1,151 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracle, shape/dtype
+sweeps, and agreement with the core fake-quant semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import act_scale_from_stats, quantize_weight
+from repro.core.sparq import SparqConfig, sparq_fake_quant
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.sparq_matmul import sparq_matmul_pallas
+from repro.kernels.sparq_quant import sparq_quant_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+CONFIGS = [
+    SparqConfig.opt5(signed=True),
+    SparqConfig.opt3(signed=True, rounding=False),
+    SparqConfig.opt2(signed=True),
+    SparqConfig.opt6(signed=True),
+    SparqConfig.opt7(signed=True, vsparq=False),
+    SparqConfig.opt5(signed=False),        # paper's unsigned mode
+    SparqConfig.opt3(signed=False, vsparq=False),
+    SparqConfig(enabled=False, signed=True),  # plain A8W8
+]
+
+
+def _mk_inputs(m, k, n, signed, dtype=jnp.float32, sparsity=0.3):
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k), dtype=jnp.float32)
+    if not signed:
+        x = jnp.maximum(x, 0.0)
+    # inject exact zeros so vSPARQ's pair path is exercised
+    mask = jax.random.uniform(jax.random.PRNGKey(2), (m, k)) < sparsity
+    x = jnp.where(mask, 0.0, x).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, n)) / np.sqrt(k)
+    w_codes, wqs = quantize_weight(w, 8)
+    qs = act_scale_from_stats(float(jnp.max(jnp.abs(x))) or 1.0, bits=8,
+                              signed=signed)
+    return x, w_codes.astype(jnp.int8), qs, wqs.scale
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=lambda c: c.name)
+def test_matmul_kernel_matches_oracle(cfg):
+    m, k, n = 128, 512, 128
+    x, w_codes, qs, cscale = _mk_inputs(m, k, n, cfg.signed)
+    kw = dict(bits=cfg.bits, opts_shifts=cfg.shifts, rounding=cfg.rounding,
+              vsparq=cfg.vsparq, signed=cfg.signed, max_val=cfg.max_val,
+              enabled=cfg.enabled)
+    got = sparq_matmul_pallas(x, w_codes, jnp.float32(qs.scale), cscale,
+                              bm=64, bn=64, bk=128, interpret=True, **kw)
+    want = kref.ref_sparq_matmul(x, w_codes, qs.scale, cscale, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(64, 256, 64), (128, 128, 256),
+                                   (256, 1024, 32)])
+def test_matmul_kernel_shape_sweep(shape):
+    m, k, n = shape
+    cfg = SparqConfig.opt3(signed=True)
+    x, w_codes, qs, cscale = _mk_inputs(m, k, n, True)
+    got = sparq_matmul_pallas(
+        x, w_codes, jnp.float32(qs.scale), cscale, bm=64, bn=32, bk=128,
+        interpret=True, bits=cfg.bits, opts_shifts=cfg.shifts,
+        rounding=cfg.rounding, vsparq=cfg.vsparq, signed=True,
+        max_val=cfg.max_val, enabled=True)
+    want = kref.ref_sparq_matmul(
+        x, w_codes, qs.scale, cscale, bits=cfg.bits, opts_shifts=cfg.shifts,
+        rounding=cfg.rounding, vsparq=cfg.vsparq, signed=True,
+        max_val=cfg.max_val, enabled=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel_dtypes(dtype):
+    cfg = SparqConfig.opt5(signed=True)
+    x, w_codes, qs, cscale = _mk_inputs(64, 128, 64, True, dtype=dtype)
+    got = sparq_matmul_pallas(
+        x, w_codes, jnp.float32(qs.scale), cscale, bm=64, bn=64, bk=128,
+        interpret=True, bits=4, opts_shifts=cfg.shifts, rounding=True,
+        vsparq=True, signed=True, max_val=127, enabled=True)
+    want = kref.ref_sparq_matmul(
+        x.astype(jnp.float32), w_codes, qs.scale, cscale, bits=4,
+        opts_shifts=cfg.shifts, rounding=True, vsparq=True, signed=True,
+        max_val=127, enabled=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wrapper_pads_and_unpads():
+    cfg = SparqConfig.opt5(signed=True)
+    x = jax.random.normal(KEY, (10, 6, 130))  # ragged everything
+    w = jax.random.normal(jax.random.PRNGKey(9), (130, 50)) * 0.1
+    w_codes, wqs = quantize_weight(w, 8)
+    qs = act_scale_from_stats(float(jnp.max(jnp.abs(x))), bits=8, signed=True)
+    got = ops.quantized_matmul(x, w_codes.astype(jnp.int8), qs, wqs.scale,
+                               cfg, impl="pallas", block=(64, 64, 128))
+    want = ops.quantized_matmul(x, w_codes.astype(jnp.int8), qs, wqs.scale,
+                                cfg, impl="reference")
+    assert got.shape == (10, 6, 50)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", [SparqConfig.opt5(signed=True),
+                                 SparqConfig.opt3(signed=True),
+                                 SparqConfig.opt6(signed=True)],
+                         ids=lambda c: c.name)
+def test_quant_kernel_matches_oracle(cfg):
+    x = jax.random.normal(KEY, (256, 128))
+    x = jnp.where(jax.random.uniform(jax.random.PRNGKey(5), x.shape) < 0.4,
+                  0.0, x)
+    qs = act_scale_from_stats(float(jnp.max(jnp.abs(x))), bits=8, signed=True)
+    kw = dict(bits=cfg.bits, opts_shifts=cfg.shifts, rounding=cfg.rounding,
+              vsparq=cfg.vsparq, signed=True, max_val=127)
+    codes_k, meta_k = sparq_quant_pallas(
+        x, jnp.float32(qs.scale), bm=128, interpret=True, **kw)
+    codes_r, meta_r = kref.ref_sparq_quant(x, qs.scale, **kw)
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+    np.testing.assert_array_equal(np.asarray(meta_k), np.asarray(meta_r))
+
+
+def test_quant_codes_match_fake_quant():
+    """codes * scale == the core fake-quant reconstruction."""
+    cfg = SparqConfig.opt5(signed=True)
+    x = jax.random.normal(KEY, (128, 64))
+    qs = act_scale_from_stats(float(jnp.max(jnp.abs(x))), bits=8, signed=True)
+    codes, _ = ops.sparq_quantize(x, qs, cfg, impl="reference")
+    recon = codes.astype(jnp.float32) * qs.scale
+    want = sparq_fake_quant(x, qs, cfg)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_meta_bits_roundtrip():
+    """Meta byte + data nibble reconstructs the trimmed value (storage
+    format sanity: decode(q, shift) == codes when not mux'd)."""
+    cfg = SparqConfig.opt5(signed=True, rounding=True)
+    x = jnp.abs(jax.random.normal(KEY, (64, 32))) + 0.1  # no zeros -> no mux
+    qs = act_scale_from_stats(float(jnp.max(x)), bits=8, signed=True)
+    codes, meta = ops.sparq_quantize(x, qs, cfg, impl="reference")
+    codes = np.asarray(codes, np.int32)
+    meta = np.asarray(meta, np.int32)
+    s_even, s_odd = (meta >> 3) & 7, meta & 7
+    mux = (meta >> 6) & 1
+    assert (mux == 0).all()
+    shift = np.where(np.arange(32)[None, :] % 2 == 0, s_even, s_odd)
+    assert ((np.abs(codes) >> shift) << shift == np.abs(codes)).all()
+    assert (np.abs(codes) >> shift < (1 << cfg.bits)).all()

@@ -1,0 +1,110 @@
+"""End-to-end reproduction checks of the paper's claims on the trained
+mini-CNN (DESIGN.md §7 tier 3). Statistical note: the synthetic eval gives
+~±0.5% noise per config, so assertions use tolerant margins; the *strict*
+orderings are proven noise-free at the SQNR level (test_quantizer.py) and
+bit level (test_bsparq.py). First pytest run trains the CNNs (~2 min),
+later runs hit the benchmark cache."""
+import numpy as np
+import pytest
+
+from benchmarks import common, tables
+from repro.core.sparq import SparqConfig
+
+MARGIN = 0.012  # paired-eval noise allowance
+
+
+@pytest.fixture(scope="module")
+def model():
+    return common.train_cnn()
+
+
+@pytest.fixture(scope="module")
+def scales(model):
+    return common.calibrate_cnn(model)
+
+
+@pytest.fixture(scope="module")
+def fp32(model, scales):
+    return common.cnn_accuracy(model)
+
+
+def _acc(model, scales, cfg, stc=False):
+    return common.cnn_accuracy(model, common.quant_ctx(scales, cfg, stc=stc))
+
+
+class TestTable1:
+    def test_model_trained(self, fp32):
+        assert fp32 > 0.85  # far above 1/8 chance
+
+    def test_a8w8_negligible(self, model, scales, fp32):
+        """Paper: INT8 mapping yields negligible degradation."""
+        assert _acc(model, scales, SparqConfig(enabled=False)) > fp32 - 0.01
+
+    def test_a8w4_noticeable(self, model, scales, fp32):
+        """Paper: below 8 bits (naive) degradation becomes noticeable."""
+        a8w4 = _acc(model, scales, SparqConfig(enabled=False, weight_bits=4))
+        assert a8w4 < fp32 - 0.015
+
+
+class TestTable2:
+    def test_sparq_4bit_minor_degradation(self, model, scales, fp32):
+        """Headline claim: SPARQ 4-bit ~= 8-bit accuracy."""
+        for cfg in (SparqConfig.opt5(), SparqConfig.opt3()):
+            assert _acc(model, scales, cfg) > fp32 - 0.025
+
+    def test_trim_deltas_bounded(self, model, scales, fp32):
+        """Model-level note (EXPERIMENTS.md §Reproduction): on this noisy
+        synthetic task, trim's downward bias acts as activation shrinkage
+        and can IMPROVE accuracy (deltas here are small positive) — the
+        paper's strict 5opt>=3opt>=2opt error ordering is therefore
+        asserted at the SQNR/bit level (test_quantizer/test_bsparq), and
+        at model level we assert boundedness."""
+        for opts in (5, 3, 2):
+            a = _acc(model, scales, SparqConfig(bits=4, opts=opts,
+                                                rounding=False))
+            assert abs(a - fp32) < 0.08
+
+
+class TestTable4:
+    def test_low_bits_degrade_more(self, model, scales, fp32):
+        """2-bit hurts more than 4-bit (Table 2 vs Table 4 pattern)."""
+        a4 = _acc(model, scales, SparqConfig.opt5())
+        a2 = _acc(model, scales, SparqConfig.opt7())
+        assert a4 >= a2 - MARGIN
+        assert a2 > 0.5  # still far above chance — vSPARQ rescues 2-bit
+
+    def test_vsparq_helps_at_2bit(self, model, scales):
+        """Paper §5.1: vSPARQ impact grows as bits shrink."""
+        w = _acc(model, scales, SparqConfig.opt7(vsparq=True))
+        wo = _acc(model, scales, SparqConfig.opt7(vsparq=False))
+        assert w >= wo - MARGIN
+
+
+class TestTable6:
+    @pytest.fixture(scope="class")
+    def pruned(self):
+        return common.train_cnn(tag="cnn_2_4", prune_2_4=True)
+
+    def test_pruned_model_works(self, pruned):
+        from repro.core.pruning import sparsity
+        acc = common.cnn_accuracy(pruned)
+        assert acc > 0.8
+        w = pruned["params"]["stages"][0][0]["w1"]
+        assert abs(sparsity(w.reshape(-1, w.shape[-1])) - 0.5) < 1e-6
+
+    def test_stc_sparq_minor_degradation(self, pruned):
+        scales = common.calibrate_cnn(pruned)
+        fp32 = common.cnn_accuracy(pruned, n=256)
+        acc = common.cnn_accuracy(
+            pruned, common.quant_ctx(scales, SparqConfig.opt5(), stc=True),
+            n=256)
+        assert acc > fp32 - 0.03
+
+
+class TestBitStats:
+    def test_activation_sparsity_supports_vsparq(self, model):
+        """Paper premise: post-ReLU activations have high zero rates."""
+        rows = {r[0]: r[2] for r in tables.bit_stats(model)}
+        assert rows["zero_fraction"] > 0.3
+        # bell-shape: higher bits toggle less often
+        assert rows["bit7_toggle_nonzero"] < rows["bit5_toggle_nonzero"]

@@ -1,0 +1,60 @@
+"""Offline serving-weight quantization (models/quantize.py): structure,
+roundtrip error, and end-to-end equivalence with on-the-fly quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_reduced_config
+from repro.core.sparq import SparqConfig
+from repro.models.common import QuantCtx
+from repro.models.model import Model
+from repro.models.quantize import as_weight, is_qweight, quantize_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_structure_and_roundtrip():
+    cfg = get_reduced_config("tinyllama-1.1b").replace(dtype=jnp.float32)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    qp = quantize_params(params)
+    # matmul weights became {"q","s"}; norms/embeddings untouched
+    blk = qp["blocks"][0]
+    assert is_qweight(blk["attn"]["wq"]) and is_qweight(blk["ffn"]["w_up"])
+    assert not is_qweight(qp["embed"])
+    assert blk["attn"]["wq"]["q"].dtype == jnp.int8
+    # per-layer per-channel scales for stacked [L, din, dout]
+    L, _, dout = params["blocks"][0]["attn"]["wq"].shape
+    assert blk["attn"]["wq"]["s"].shape == (L, dout)
+    # dequantized weights close to originals (8-bit per-channel)
+    w = np.asarray(params["blocks"][0]["ffn"]["w_up"])
+    wd = np.asarray(as_weight(blk["ffn"]["w_up"], jnp.float32))
+    rel = np.abs(w - wd).max() / (np.abs(w).max() + 1e-9)
+    assert rel < 1.0 / 127
+
+
+def test_serving_equivalence_prequantized_vs_inline():
+    """dense() must produce identical results from pre-quantized codes and
+    from quantize-at-use (same scales, same integer arithmetic)."""
+    cfg = get_reduced_config("tinyllama-1.1b").replace(dtype=jnp.float32)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)}
+    ctx = QuantCtx(mode="quantized", cfg=SparqConfig.opt5(signed=True))
+    ref = model.logits(params, batch, ctx)
+    got = model.logits(quantize_params(params), batch, ctx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unquantized_forward_with_qweights_close():
+    """off-mode forward through dequantized int8 weights stays close to the
+    float model (INT8 weight roundtrip only)."""
+    cfg = get_reduced_config("granite-20b").replace(dtype=jnp.float32)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)}
+    a = np.asarray(model.logits(params, batch))
+    b = np.asarray(model.logits(quantize_params(params), batch))
+    denom = np.abs(a).mean() + 1e-9
+    assert np.abs(a - b).mean() / denom < 0.05

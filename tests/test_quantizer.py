@@ -1,0 +1,133 @@
+"""Min-max PTQ, ACIQ baseline, SQNR orderings (paper §1/§5.1 premises)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import (
+    act_scale_from_stats, weight_scale, quantize, dequantize, fake_quant,
+    quantize_weight, MinMaxObserver)
+from repro.core.aciq import aciq_fake_quant
+from repro.core.sparq import SparqConfig, sparq_fake_quant, sparq_dot
+
+
+def sqnr(x, xq):
+    x, xq = np.asarray(x, np.float64), np.asarray(xq, np.float64)
+    return 10 * np.log10((x ** 2).sum() / ((x - xq) ** 2).sum() + 1e-30)
+
+
+class TestQuantizer:
+    def test_roundtrip_unsigned(self):
+        x = jnp.linspace(0, 10, 1000)
+        qs = act_scale_from_stats(10.0, bits=8, signed=False)
+        err = np.abs(np.asarray(fake_quant(x, qs) - x))
+        assert err.max() <= float(qs.scale) / 2 + 1e-6
+
+    def test_roundtrip_signed(self):
+        x = jnp.linspace(-3, 3, 1000)
+        qs = act_scale_from_stats(3.0, bits=8, signed=True)
+        err = np.abs(np.asarray(fake_quant(x, qs) - x))
+        assert err.max() <= float(qs.scale) / 2 + 1e-6
+
+    def test_per_channel_weight(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 16)) * \
+            jnp.arange(1, 17)[None, :]
+        wq, qs = quantize_weight(w, bits=8)
+        assert qs.scale.shape == (16,)
+        err = np.abs(np.asarray(dequantize(wq, qs) - w))
+        assert (err.max(axis=0) <= np.asarray(qs.scale) / 2 + 1e-6).all()
+
+    def test_observer(self):
+        obs = MinMaxObserver()
+        obs = obs.update(jnp.asarray([1.0, 5.0]))
+        obs = obs.update(jnp.asarray([-2.0, 3.0]))
+        assert obs.max_val == 5.0 and obs.min_val == -2.0
+        qs = obs.scale(bits=8)
+        assert qs.signed
+
+
+class TestSQNROrderings:
+    """The paper's qualitative claims on bell-shaped data (§5.1, Table 2/4)."""
+
+    @pytest.fixture
+    def relu_gaussian(self):
+        # post-ReLU half-gaussian with ~55% zeros: the paper's CNN activation model
+        x = jax.random.normal(jax.random.PRNGKey(42), (1 << 14,))
+        return jnp.maximum(x - 0.1, 0.0) * 4.0
+
+    def _fq(self, x, cfg):
+        qs = act_scale_from_stats(float(jnp.max(jnp.abs(x))),
+                                  bits=8, signed=cfg.signed)
+        return sparq_fake_quant(x, qs, cfg)
+
+    def test_more_opts_better(self, relu_gaussian):
+        x = relu_gaussian
+        s = {o: sqnr(x, self._fq(x, SparqConfig(bits=4, opts=o, rounding=False)))
+             for o in (5, 3, 2)}
+        assert s[5] >= s[3] >= s[2]
+
+    def test_rounding_helps(self, relu_gaussian):
+        x = relu_gaussian
+        for o in (5, 3, 2):
+            plus = sqnr(x, self._fq(x, SparqConfig(bits=4, opts=o, rounding=True)))
+            minus = sqnr(x, self._fq(x, SparqConfig(bits=4, opts=o, rounding=False)))
+            assert plus >= minus
+
+    def test_vsparq_helps_with_sparsity(self, relu_gaussian):
+        x = relu_gaussian
+        with_v = sqnr(x, self._fq(x, SparqConfig(bits=4, opts=2, vsparq=True)))
+        no_v = sqnr(x, self._fq(x, SparqConfig(bits=4, opts=2, vsparq=False)))
+        assert with_v > no_v
+
+    def test_vsparq_gain_grows_as_bits_shrink(self, relu_gaussian):
+        """Paper §5.1: 'vSPARQ impact is more significant in lower bit-widths'."""
+        x = relu_gaussian
+        gains = {}
+        for bits, opts in [(4, 5), (3, 6), (2, 7)]:
+            wv = sqnr(x, self._fq(x, SparqConfig(bits=bits, opts=opts, vsparq=True)))
+            nv = sqnr(x, self._fq(x, SparqConfig(bits=bits, opts=opts, vsparq=False)))
+            gains[bits] = wv - nv
+        assert gains[2] > gains[4]
+
+    def test_sparq_beats_static_4bit(self, relu_gaussian):
+        """Dynamic windowing beats static uniform 4-bit (the A4W8 column)."""
+        x = relu_gaussian
+        sparq = sqnr(x, self._fq(x, SparqConfig.opt5()))
+        qs4 = act_scale_from_stats(float(jnp.max(x)), bits=4, signed=False)
+        static4 = sqnr(x, fake_quant(x, qs4))
+        assert sparq > static4
+
+    def test_aciq_clip_beats_minmax_at_4bit(self, relu_gaussian):
+        x = relu_gaussian * (1 + 10 * (jax.random.uniform(
+            jax.random.PRNGKey(7), relu_gaussian.shape) > 0.999))  # outliers
+        aciq = sqnr(x, aciq_fake_quant(x, bits=4, signed=False))
+        qs = act_scale_from_stats(float(jnp.max(x)), bits=4, signed=False)
+        minmax = sqnr(x, fake_quant(x, qs))
+        assert aciq > minmax
+
+
+class TestSparqDot:
+    def test_matches_manual(self):
+        key = jax.random.PRNGKey(0)
+        x = jnp.maximum(jax.random.normal(key, (8, 64)), 0)
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        cfg = SparqConfig.opt5()
+        qs = act_scale_from_stats(float(jnp.max(x)), bits=8, signed=False)
+        wq, wqs = quantize_weight(w, 8)
+        y = sparq_dot(x, wq, qs, wqs, cfg)
+        # reference: fake-quant activations, dequant weights, float matmul
+        xr = sparq_fake_quant(x, qs, cfg)
+        ref = xr @ dequantize(wq, wqs)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_a8w8_close_to_fp(self):
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (16, 128))
+        w = jax.random.normal(jax.random.PRNGKey(4), (128, 64)) / 11.3
+        cfg = SparqConfig(enabled=False, signed=True)
+        qs = act_scale_from_stats(float(jnp.max(jnp.abs(x))), bits=8, signed=True)
+        wq, wqs = quantize_weight(w, 8)
+        y = np.asarray(sparq_dot(x, wq, qs, wqs, cfg))
+        ref = np.asarray(x @ w)
+        assert sqnr(ref, y) > 30  # INT8 dot should be ~clean

@@ -1,0 +1,193 @@
+"""Substrate tests: checkpoint atomicity/elasticity, fault-tolerance logic,
+data determinism, gradient compression, optimizer, sharding rule fitting."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint import manager as ckpt
+from repro.data.pipeline import Batcher, DataConfig
+from repro.distributed.collectives import GradCompressor, sparq_compress
+from repro.distributed.fault import (ElasticCoordinator, HeartbeatMonitor,
+                                     StragglerDetector, plan_remesh)
+from repro.distributed.sharding import fit_spec, param_pspecs
+from repro.optim.adamw import AdamW, cosine_schedule
+
+
+class TestCheckpoint:
+    def _tree(self, k=0):
+        return {"a": jnp.arange(12.0).reshape(3, 4) + k,
+                "b": {"c": jnp.ones((5,), jnp.int32) * (k + 1)},
+                "d": [jnp.zeros((2, 2)) + k]}
+
+    def test_roundtrip(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 7, self._tree(3))
+        out = ckpt.restore(d, 7, self._tree(0))
+        jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), out, self._tree(3))
+
+    def test_latest_and_prune(self, tmp_path):
+        d = str(tmp_path)
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(d, s, self._tree(s), keep=2)
+        assert ckpt.latest_step(d) == 5
+        assert ckpt.all_steps(d) == [4, 5]
+
+    def test_atomic_no_tmp_left(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, self._tree())
+        assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+    def test_missing_leaf_keeps_template(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, {"a": jnp.ones((2,))})
+        out = ckpt.restore(d, 1, {"a": jnp.zeros((2,)),
+                                  "new": jnp.full((3,), 9.0)})
+        np.testing.assert_array_equal(np.asarray(out["a"]), [1, 1])
+        np.testing.assert_array_equal(np.asarray(out["new"]), [9, 9, 9])
+
+
+class TestFault:
+    def test_heartbeat_death(self):
+        mon = HeartbeatMonitor(timeout_s=10)
+        mon.beat(0, 5, now=100.0)
+        mon.beat(1, 5, now=100.0)
+        mon.beat(1, 6, now=200.0)
+        assert mon.dead_workers(now=205.0) == [0]
+        assert mon.alive(now=205.0) == [1]
+
+    def test_straggler_zscore(self):
+        det = StragglerDetector(z_threshold=2.0)
+        for w in range(8):
+            for _ in range(10):
+                det.record(w, 1.0 if w != 3 else 5.0)
+        assert det.stragglers() == [3]
+
+    def test_remesh_plan(self):
+        plan = plan_remesh(512, model_parallel=16)
+        assert plan.mesh_shape == (2, 16, 16)
+        plan = plan_remesh(511, model_parallel=16)  # lost one chip
+        assert plan.mesh_shape == (16, 16)
+        plan = plan_remesh(100, model_parallel=16)
+        assert plan.mesh_shape == (4, 16)
+        with pytest.raises(ValueError):
+            plan_remesh(8, model_parallel=16)
+
+    def test_coordinator_end_to_end(self):
+        c = ElasticCoordinator(n_workers=4, model_parallel=2)
+        for w in range(4):
+            c.step_report(w, 1, 0.5, now=100.0)
+        assert c.maybe_remesh(now=101.0) is None
+        for w in (0, 1, 2):
+            c.step_report(w, 2, 0.5, now=280.0)
+        plan = c.maybe_remesh(restore_step=2, now=290.0)
+        assert plan is not None and plan.dropped_workers == (3,)
+        assert plan.mesh_shape == (1, 2) and plan.restore_step == 2
+
+
+class TestData:
+    def test_determinism_across_restart(self):
+        cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=4)
+        b1, b2 = Batcher(cfg), Batcher(cfg)
+        for step in (0, 5, 17):
+            x, y = b1.global_batch(step), b2.global_batch(step)
+            np.testing.assert_array_equal(np.asarray(x["tokens"]),
+                                          np.asarray(y["tokens"]))
+
+    def test_steps_differ_and_structured(self):
+        cfg = DataConfig(vocab_size=512, seq_len=64, global_batch=4)
+        b = Batcher(cfg)
+        t0 = np.asarray(b.global_batch(0)["tokens"])
+        t1 = np.asarray(b.global_batch(1)["tokens"])
+        assert (t0 != t1).any()
+        # structured stream: far fewer unique tokens than uniform noise
+        assert len(np.unique(t0)) < 0.8 * min(512, t0.size)
+
+    def test_host_sharding_disjoint(self):
+        cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=8)
+        a = Batcher(cfg, host_id=0, n_hosts=2).local_batch(3)
+        b = Batcher(cfg, host_id=1, n_hosts=2).local_batch(3)
+        assert a["tokens"].shape == (4, 16)
+        assert (np.asarray(a["tokens"]) != np.asarray(b["tokens"])).any()
+
+
+class TestGradCompression:
+    def test_error_feedback_accumulates(self):
+        gc = GradCompressor(min_size=1)
+        g = {"w": jnp.linspace(-1, 1, 8192).reshape(64, 128)}
+        state = gc.init(g)
+        cg, state = gc.compress(g, state)
+        err = np.asarray(state["w"])
+        assert np.abs(err).max() > 0  # quantization error captured
+        # compressed + error == original (exact bookkeeping)
+        np.testing.assert_allclose(
+            np.asarray(cg["w"], np.float64) + err,
+            np.asarray(g["w"], np.float64), rtol=1e-6, atol=1e-6)
+
+    def test_compression_is_close(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (256, 256)) * 1e-3
+        c = sparq_compress(g, bits=4)
+        rel = float(jnp.linalg.norm(c - g) / jnp.linalg.norm(g))
+        assert rel < 0.05  # 4-bit windowed: ~2% typical
+
+    def test_tiny_tensors_exact(self):
+        gc = GradCompressor(min_size=4096)
+        g = {"scale": jnp.asarray([1.0, -2.0, 3.0])}
+        cg, _ = gc.compress(g, gc.init(g))
+        np.testing.assert_array_equal(np.asarray(cg["scale"]),
+                                      np.asarray(g["scale"]))
+
+
+class TestOptimizer:
+    def test_adamw_converges_quadratic(self):
+        opt = AdamW(lr=0.1, weight_decay=0.0)
+        params = {"x": jnp.asarray([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = jax.tree.map(lambda p: 2 * p, params)  # d/dx x^2
+            params, state, _ = opt.update(grads, state, params)
+        assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+    def test_clip_norm(self):
+        opt = AdamW(lr=1e-3, clip_norm=1.0)
+        params = {"x": jnp.zeros((4,))}
+        state = opt.init(params)
+        _, _, m = opt.update({"x": jnp.full((4,), 100.0)}, state, params)
+        assert float(m["grad_norm"]) > 100
+
+    def test_schedule(self):
+        lr = cosine_schedule(1.0, warmup=10, total=110)
+        assert abs(float(lr(jnp.asarray(5))) - 0.5) < 1e-6
+        assert float(lr(jnp.asarray(10))) == 1.0
+        assert float(lr(jnp.asarray(110))) <= 0.11
+
+
+class TestShardingRules:
+    def test_fit_spec_drops_indivisible(self):
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        # all sizes divide 1 -> everything kept
+        assert fit_spec((8, 8), P("data", "model"), mesh) == \
+            P("data", "model")
+
+    def test_param_pspecs_shapes(self):
+        from repro.configs.base import get_reduced_config
+        from repro.models.model import Model
+        cfg = get_reduced_config("tinyllama-1.1b")
+        model = Model(cfg)
+        abs_p = jax.eval_shape(
+            lambda: model.init_params(jax.random.PRNGKey(0)))
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        specs = param_pspecs(abs_p, mesh)
+        flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert all(isinstance(s, P) for s in flat)
+        # every spec's rank must not exceed its param's rank
+        leaves = jax.tree.leaves(abs_p)
+        specs_l = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        for a, s in zip(leaves, specs_l):
+            assert len(s) <= len(a.shape)

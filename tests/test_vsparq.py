@@ -1,0 +1,95 @@
+"""vSPARQ pairing semantics (paper §3.2, Eq. 2) + STC grouped path (§5.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bsparq import bsparq_recon, shifts_for
+from repro.core.vsparq import vsparq_recon, vsparq_recon_signed, vsparq_recon_grouped
+from repro.core.pruning import prune_2_4, keep_indices, sparsity
+
+SH = shifts_for(4, 5)
+
+
+class TestEq2:
+    def test_partner_zero_keeps_full_precision(self):
+        # (x, 0): x keeps 8 bits even if not representable in 4-bit window
+        x = jnp.asarray([27, 0, 0, 91])
+        r = np.asarray(vsparq_recon(x, 4, SH, False))
+        np.testing.assert_array_equal(r, [27, 0, 0, 91])
+
+    def test_both_nonzero_both_trimmed(self):
+        x = jnp.asarray([27, 91])  # both non-zero -> both bSPARQ'd
+        r = np.asarray(vsparq_recon(x, 4, SH, False))
+        expect = np.asarray(bsparq_recon(x, 4, SH, False))
+        np.testing.assert_array_equal(r, expect)
+        assert r[0] == 26  # paper example value
+
+    def test_mixed_pairs(self):
+        x = jnp.asarray([[27, 91, 27, 0],
+                         [0, 255, 13, 13]])
+        r = np.asarray(vsparq_recon(x, 4, SH, False))
+        np.testing.assert_array_equal(r[0], [26, 88, 27, 0])
+        np.testing.assert_array_equal(r[1], [0, 255, 13, 13])
+
+    @given(st.lists(st.integers(0, 255), min_size=2, max_size=128)
+           .filter(lambda v: len(v) % 2 == 0))
+    @settings(max_examples=100, deadline=None)
+    def test_error_never_above_bsparq(self, xs):
+        """vSPARQ only ever *upgrades* precision vs plain bSPARQ (Eq. 2)."""
+        x = np.asarray(xs)
+        rv = np.asarray(vsparq_recon(jnp.asarray(x), 4, SH, True))
+        rb = np.asarray(bsparq_recon(jnp.asarray(x), 4, SH, True))
+        assert (np.abs(x - rv) <= np.abs(x - rb)).all()
+
+    @given(st.lists(st.integers(-127, 127), min_size=2, max_size=64)
+           .filter(lambda v: len(v) % 2 == 0))
+    @settings(max_examples=50, deadline=None)
+    def test_signed_pairing(self, xs):
+        x = np.asarray(xs)
+        r = np.asarray(vsparq_recon_signed(jnp.asarray(x), 4, SH, True))
+        # zero-partner lanes are exact
+        pairs = x.reshape(-1, 2)
+        rp = r.reshape(-1, 2)
+        zero_partner = pairs == 0
+        keeps = zero_partner[:, ::-1]  # lane keeps precision if partner zero
+        np.testing.assert_array_equal(rp[keeps], pairs[keeps])
+
+
+class TestSparseTensorCore:
+    def test_prune_2_4_sparsity(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        pw = prune_2_4(w, axis=0)
+        assert abs(sparsity(pw) - 0.5) < 1e-6
+        # surviving weights are the larger-magnitude half of each group
+        g = np.abs(np.asarray(w)).T.reshape(32, -1, 4)
+        pg = np.asarray(pw).T.reshape(32, -1, 4)
+        kept_mag = np.where(pg != 0, g, 0).sum(-1)
+        top2 = np.sort(g, axis=-1)[..., 2:].sum(-1)
+        np.testing.assert_allclose(kept_mag, top2, rtol=1e-6)
+
+    def test_keep_indices_match_pruned(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        idx = np.asarray(keep_indices(w, axis=0))  # [8, 4, 2]
+        pw = np.asarray(prune_2_4(w, axis=0))
+        for o in range(8):
+            for gidx in range(4):
+                nz = np.nonzero(pw[gidx * 4:(gidx + 1) * 4, o])[0]
+                np.testing.assert_array_equal(np.sort(nz), np.sort(idx[o, gidx]))
+
+    def test_grouped_recon_pairs_selected_lanes(self):
+        # group of 4 with keep_idx selecting lanes 1,3; lane1=0 -> lane3 full
+        x = jnp.asarray([5, 0, 7, 91])
+        keep = jnp.asarray([[1, 3]])
+        r = np.asarray(vsparq_recon_grouped(x, keep, 4, SH, False))
+        assert r[3] == 91  # full precision: partner (lane 1) is zero
+        assert r[1] == 0
+        # unselected lanes pass through
+        assert r[0] == 5 and r[2] == 7
+
+    def test_grouped_recon_both_nonzero(self):
+        x = jnp.asarray([5, 33, 7, 91])
+        keep = jnp.asarray([[1, 3]])
+        r = np.asarray(vsparq_recon_grouped(x, keep, 4, SH, False))
+        expect = np.asarray(bsparq_recon(jnp.asarray([33, 91]), 4, SH, False))
+        assert r[1] == expect[0] and r[3] == expect[1]
