@@ -29,9 +29,12 @@ TRAIN_STEPS = 420
 BATCH = 96
 
 
+_RECIPE_V = 2   # bump when training/recalibration changes invalidate caches
+
+
 def _cache_path(tag):
     os.makedirs(CACHE, exist_ok=True)
-    return os.path.join(CACHE, tag + ".npz")
+    return os.path.join(CACHE, f"{tag}_v{_RECIPE_V}.npz")
 
 
 def train_cnn(cfg: Optional[cnn.CNNConfig] = None, tag="cnn",
@@ -78,6 +81,13 @@ def train_cnn(cfg: Optional[cnn.CNNConfig] = None, tag="cnn",
         params, state, loss = step(params, state, batch)
         if prune_2_4 and i >= steps // 4:   # prune, then keep training
             params = apply_prune(params)
+    # the train loop normalizes with batch stats and never maintains the BN
+    # running stats — set them from the training distribution before eval
+    # (calibrate_cnn recalibrates again on the calibration set, paper §5)
+    params = cnn.recalibrate_bn(
+        params, [cnn.synthetic_dataset(
+            jax.random.fold_in(jax.random.PRNGKey(SEED + 2), i), cfg, BATCH)
+            for i in range(16)], cfg)
     if prune_2_4:
         params = apply_prune(params)
 

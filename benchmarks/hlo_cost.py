@@ -116,9 +116,15 @@ class HloCost:
                 for d in out_dims:
                     out_n *= d
                 k = 1
-                ops = [o.strip().lstrip("%") for o in dm.group(3).split(",")]
-                lhs_def = defs.get(ops[0], "")
-                _, lhs_dims = _shape_dims(lhs_def)
+                inner = dm.group(3).lstrip()
+                sm = _SHAPE_RE.match(inner)
+                if sm:
+                    # operand carries its shape inline (newer XLA text)
+                    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+                else:
+                    ops = [o.strip().lstrip("%") for o in inner.split(",")]
+                    lhs_def = defs.get(ops[0], "")
+                    _, lhs_dims = _shape_dims(lhs_def)
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
                 if lhs_dims and cm:
                     for idx in cm.group(1).split(","):

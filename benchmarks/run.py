@@ -2,18 +2,52 @@
 
   PYTHONPATH=src python -m benchmarks.run [--tables 1,2,3,4,5,6,stats]
 
-Output rows: table,config,metric,value
+Output rows: table,config,metric,value. The decode_cache scenario also
+writes BENCH_decode.json (decode tok/s + modeled cache bytes per KV-cache
+layout) so the serving-perf trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 
+def decode_cache_rows(out_json: str = "BENCH_decode.json") -> list:
+    """Decode-throughput x cache-layout sweep on the reduced tiny LM:
+    fp32 / bf16 / sparq (§5.1 packed int8) KV caches through the
+    scan-based DecodeEngine."""
+    from repro.launch import serve as serve_mod
+    rows, blob = [], {}
+    for layout in ("fp32", "bf16", "sparq"):
+        stats = serve_mod.main([
+            "--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
+            "--prompt-len", "32", "--gen", "16", "--sparq", "5opt",
+            "--kv-cache", layout, "--calibrate", "1"])
+        blob[layout] = {
+            "decode_tok_s": round(stats["decode_tok_s"], 2),
+            "prefill_s": round(stats["prefill_s"], 4),
+            "cache_bytes_per_value": stats["cache_bytes_per_value"],
+            "cache_ctrl_bytes_per_value":
+                stats["cache_ctrl_bytes_per_value"],
+            "cache_total_bytes": stats["cache_total_bytes"],
+        }
+        cfg_name = f"tinyllama_reduced_{layout}"
+        rows += [(cfg_name, "decode_tok_s", blob[layout]["decode_tok_s"]),
+                 (cfg_name, "cache_bytes_per_value",
+                  blob[layout]["cache_bytes_per_value"]),
+                 (cfg_name, "cache_total_bytes",
+                  round(blob[layout]["cache_total_bytes"], 0))]
+    with open(out_json, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_json}", file=sys.stderr)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", default="1,2,3,4,5,6,stats,serve")
+    ap.add_argument("--tables", default="1,2,3,4,5,6,stats,serve,decode_cache")
     args = ap.parse_args()
     want = set(args.tables.split(","))
 
@@ -54,6 +88,9 @@ def main() -> None:
                  round(stats["decode_tok_s"], 2)),
                 (f"tinyllama_reduced_{preset}", "prefill_us",
                  round(stats["prefill_s"] * 1e6, 0))])
+    if "decode_cache" in want:
+        # KV-cache layout sweep (fp32 / bf16 / sparq) -> BENCH_decode.json
+        common.emit("decode_cache", decode_cache_rows())
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

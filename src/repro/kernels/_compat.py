@@ -1,0 +1,20 @@
+"""jax version compatibility for Pallas TPU symbols.
+
+jax renamed TPUCompilerParams/TPUMemorySpace -> CompilerParams/MemorySpace
+around 0.5; resolve whichever spelling this jax provides, in one place.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+MemorySpace = getattr(pltpu, "MemorySpace",
+                      getattr(pltpu, "TPUMemorySpace", None))
+
+if CompilerParams is None or MemorySpace is None:  # pragma: no cover
+    raise ImportError(
+        f"jax {jax.__version__}: pallas.tpu exposes neither the new "
+        "(CompilerParams/MemorySpace) nor the old (TPU*) spellings; "
+        "update repro.kernels._compat for this version")

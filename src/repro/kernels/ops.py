@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core.quantizer import QScale
 from repro.core.sparq import SparqConfig
 from repro.kernels import ref as _ref
+from repro.kernels.sparq_dequant import sparq_dequant_pallas
 from repro.kernels.sparq_matmul import sparq_matmul_pallas
 from repro.kernels.sparq_quant import sparq_quant_pallas
 
@@ -97,7 +98,8 @@ def sparq_quantize(
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
     kw = dict(bits=cfg.bits, opts_shifts=cfg.shifts, rounding=cfg.rounding,
-              vsparq=cfg.vsparq, signed=cfg.signed, max_val=cfg.max_val)
+              vsparq=cfg.vsparq, signed=cfg.signed, max_val=cfg.max_val,
+              enabled=cfg.enabled)
     if impl == "reference":
         codes, meta = _ref.ref_sparq_quant(x2, act_qs.scale, **kw)
     else:
@@ -108,3 +110,39 @@ def sparq_quantize(
             bm=bm, interpret=not _on_tpu(), **kw)
         codes, meta = codes[:M], meta[:M]
     return codes.reshape(*lead, K), meta.reshape(*lead, K)
+
+
+def sparq_pack(codes: jnp.ndarray, meta: jnp.ndarray) -> jnp.ndarray:
+    """Reconstructed int8 codes -> stored window codes (§5.1 data nibbles).
+
+    Inverse of the decode path: |codes| >> shift is the n-bit window value
+    (or the full magnitude on mux'd lanes, whose shift is 0). Exact because
+    codes were built as (window << shift). Pure jnp — runs at cache-write
+    time right after `sparq_quantize`.
+    """
+    q = codes.astype(jnp.int32)
+    shift = _ref.meta_shifts(meta)
+    return (jnp.sign(q) * jnp.right_shift(jnp.abs(q), shift)).astype(jnp.int8)
+
+
+def sparq_dequantize(
+    store: jnp.ndarray,       # (..., K) int8 window codes
+    meta: jnp.ndarray,        # (..., K) int8 packed meta bytes
+    impl: str = "auto",
+    bm: int = 256,
+) -> jnp.ndarray:
+    """Meta-decode (KV-cache read path): (store, meta) -> int8 codes."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    lead = store.shape[:-1]
+    K = store.shape[-1]
+    s2 = store.reshape(-1, K)
+    m2 = meta.reshape(-1, K)
+    if impl == "reference":
+        codes = _ref.ref_sparq_dequant(s2, m2)
+    else:
+        M = s2.shape[0]
+        codes = sparq_dequant_pallas(
+            _pad_to(s2, bm, 0), _pad_to(m2, bm, 0),
+            bm=bm, interpret=not _on_tpu())[:M]
+    return codes.reshape(*lead, K)

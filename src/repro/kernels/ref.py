@@ -42,11 +42,15 @@ def ref_sparq_matmul(x, w_codes, act_scale, chan_scale, *, bits=4,
 
 
 def ref_sparq_quant(x, act_scale, *, bits=4, opts_shifts=(0, 1, 2, 3, 4),
-                    rounding=True, vsparq=True, signed=True, max_val=127):
+                    rounding=True, vsparq=True, signed=True, max_val=127,
+                    enabled=True):
     """Oracle for sparq_quant_pallas: returns (codes int8, meta int8)."""
     qmin = -max_val if signed else 0
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / act_scale), qmin, max_val)
     q = q.astype(jnp.int32)
+    if not enabled:
+        # plain int8 PTQ (paper baseline): full codes, empty meta
+        return q.astype(jnp.int8), jnp.zeros_like(q, dtype=jnp.int8)
     sign = jnp.sign(q)
     mag = jnp.abs(q)
     qq, ss = bsparq_encode(mag, bits, opts_shifts, rounding, max_val)
@@ -70,3 +74,19 @@ def ref_sparq_quant(x, act_scale, *, bits=4, opts_shifts=(0, 1, 2, 3, 4),
     meta_pair = mux_any * 64 + s_pair[..., 0] * 8 + s_pair[..., 1]
     meta = jnp.repeat(meta_pair, 2, axis=-1).astype(jnp.int8)
     return codes, meta
+
+
+def meta_shifts(meta: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane ShiftCtrl from the packed per-pair meta byte (§5.1):
+    [mux(1) | shift_even(3) | shift_odd(3)], mirrored to both lanes."""
+    m = meta.astype(jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, m.shape, m.ndim - 1)
+    return jnp.where(lane % 2 == 0, jnp.right_shift(m, 3) & 7, m & 7)
+
+
+def ref_sparq_dequant(store: jnp.ndarray, meta: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for sparq_dequant_pallas: int8 window codes + packed meta ->
+    int8 SPARQ-reconstructed codes (codes[i] = sign * (|store[i]| << s_i))."""
+    q = store.astype(jnp.int32)
+    shift = meta_shifts(meta)
+    return (jnp.sign(q) * jnp.left_shift(jnp.abs(q), shift)).astype(jnp.int8)

@@ -32,6 +32,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._compat import MemorySpace as _MemorySpace
+
 from repro.core.bsparq import bsparq_recon
 
 
@@ -126,13 +129,13 @@ def sparq_matmul_pallas(
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
             pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
             pl.BlockSpec((1, 1), lambda m, n, k: (0, 0),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=_MemorySpace.SMEM),
             pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_codes, act_scale.reshape(1, 1), chan_scale.reshape(1, N))

@@ -20,16 +20,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._compat import MemorySpace as _MemorySpace
+
 from repro.core.bsparq import bsparq_encode
 
 
 def _kernel(x_ref, ascale_ref, codes_ref, meta_ref, *,
-            bits, shifts, rounding, vsparq, signed, max_val):
+            bits, shifts, rounding, vsparq, signed, max_val, enabled):
     a = ascale_ref[0, 0]
     x = x_ref[...]
     qmin = -max_val if signed else 0
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / a), qmin, max_val)
     q = q.astype(jnp.int32)
+    if not enabled:
+        # plain int8 PTQ (paper baseline): full codes, empty meta
+        codes_ref[...] = q.astype(jnp.int8)
+        meta_ref[...] = jnp.zeros_like(q, dtype=jnp.int8)
+        return
     sign = jnp.sign(q)
     mag = jnp.abs(q)
     qq, ss = bsparq_encode(mag, bits, shifts, rounding, max_val)
@@ -67,7 +75,7 @@ def _kernel(x_ref, ascale_ref, codes_ref, meta_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("bits", "opts_shifts", "rounding", "vsparq", "signed",
-                     "max_val", "bm", "interpret"))
+                     "max_val", "enabled", "bm", "interpret"))
 def sparq_quant_pallas(
     x: jnp.ndarray,           # (M, K) float
     act_scale: jnp.ndarray,   # scalar f32
@@ -78,6 +86,7 @@ def sparq_quant_pallas(
     vsparq: bool = True,
     signed: bool = True,
     max_val: int = 127,
+    enabled: bool = True,
     bm: int = 256,
     interpret: bool = False,
 ):
@@ -87,14 +96,14 @@ def sparq_quant_pallas(
     assert M % bm == 0 and K % 2 == 0, (M, K, bm)
     kernel = functools.partial(
         _kernel, bits=bits, shifts=opts_shifts, rounding=rounding,
-        vsparq=vsparq, signed=signed, max_val=max_val)
+        vsparq=vsparq, signed=signed, max_val=max_val, enabled=enabled)
     return pl.pallas_call(
         kernel,
         grid=(M // bm,),
         in_specs=[
             pl.BlockSpec((bm, K), lambda m: (m, 0)),
             pl.BlockSpec((1, 1), lambda m: (0, 0),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=_MemorySpace.SMEM),
         ],
         out_specs=[
             pl.BlockSpec((bm, K), lambda m: (m, 0)),
@@ -104,7 +113,7 @@ def sparq_quant_pallas(
             jax.ShapeDtypeStruct((M, K), jnp.int8),
             jax.ShapeDtypeStruct((M, K), jnp.int8),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, act_scale.reshape(1, 1))

@@ -1,14 +1,24 @@
-"""Serving driver: batched prefill + decode with SPARQ-quantized matmuls
-(the paper's deployment scenario — PTQ'd activations over int8 weights).
+"""Serving driver: batched prefill + scan-based greedy decode with SPARQ
+quantization at both matmuls (the paper's compute path) and the KV cache
+(the §5.1 packed storage path — the memory-bound decode workload).
+
+The decode loop is a `DecodeEngine`: generation runs as a single traced
+`jax.lax.scan` inside one jitted program — no per-step Python dispatch —
+so tok/s measures the model, not the host loop. The cache layout is
+selected with `--kv-cache {fp32,bf16,sparq}`; `--impl` picks the kernel
+implementation (reference int-dot / Pallas / auto) for both the quantized
+matmuls and the cache codec.
 
 Local demo:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-      --reduced --batch 4 --prompt-len 64 --gen 32 --sparq 5opt
+      --reduced --batch 4 --prompt-len 64 --gen 32 --sparq 5opt \
+      --kv-cache sparq
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +27,8 @@ import numpy as np
 from repro.configs.base import get_config, get_reduced_config
 from repro.core.sparq import SparqConfig
 from repro.data.pipeline import Batcher, DataConfig
+from repro.models import cache as cache_mod
+from repro.models.cache import CacheConfig
 from repro.models.common import QuantCtx
 from repro.models.model import Model
 
@@ -31,38 +43,108 @@ SPARQ_PRESETS = {
 }
 
 
-def serve(model: Model, params, batch, caches, gen: int,
-          ctx: QuantCtx | None, scales_groups=None):
+def make_cache_config(layout: str, sparq: Optional[SparqConfig],
+                      impl: str = "auto") -> CacheConfig:
+    """`--kv-cache` flag -> CacheConfig. The sparq layout reuses the active
+    SPARQ preset as its codec (signed; falls back to plain int8 when the
+    preset is off/a8w8)."""
+    if layout == "fp32":
+        return CacheConfig.fp32()
+    if layout == "bf16":
+        return CacheConfig.bf16()
+    if layout == "sparq":
+        if sparq is None:   # preset off -> plain int8 storage, no trimming
+            return CacheConfig(layout="sparq", impl=impl)
+        return CacheConfig.sparq_cache(sparq, impl=impl)
+    raise ValueError(layout)
+
+
+class DecodeEngine:
+    """Greedy batched generation as one traced program per phase:
+    a jitted prefill and a jitted `lax.scan` over decode steps (the scan
+    carries (token, caches, pos); caches quantize/dequantize inside the
+    traced step when the sparq layout is active)."""
+
+    def __init__(self, model: Model, cache_cfg: Optional[CacheConfig] = None,
+                 ctx: Optional[QuantCtx] = None, scales_groups=None):
+        self.model = model
+        self.cache_cfg = cache_cfg or CacheConfig.fp32()
+        self.ctx = ctx
+        self.scales_groups = scales_groups
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn, static_argnames=("steps",))
+
+    # ------------------------------------------------------------ traced
+    def _prefill_fn(self, params, batch, caches):
+        logits, caches = self.model.prefill(
+            params, batch, caches, ctx=self.ctx,
+            scales_groups=self.scales_groups)
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), caches
+
+    def _decode_fn(self, params, tok0, caches, pos0, *, steps: int):
+        def step(carry, _):
+            tok, caches, pos = carry
+            logits, caches = self.model.decode_step(
+                params, tok, caches, pos, ctx=self.ctx,
+                scales_groups=self.scales_groups)
+            nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            return (nxt, caches, pos + 1), nxt[:, 0]
+
+        (_, caches, _), toks = jax.lax.scan(
+            step, (tok0, caches, jnp.asarray(pos0, jnp.int32)), None,
+            length=steps)
+        return toks.swapaxes(0, 1), caches  # [B, steps]
+
+    # ------------------------------------------------------------ public
+    def init_cache(self, batch: int, max_len: int):
+        return self.model.init_cache(batch, max_len,
+                                     cache_cfg=self.cache_cfg)
+
+    def generate(self, params, batch, gen: int, pad: int = 8):
+        """Returns (tokens [B, gen], stats). Prompt + generation must fit
+        in prompt_len + gen + pad cache slots."""
+        B, prompt_len = batch["tokens"].shape
+        pos0 = prompt_len + (self.model.cfg.frontend_len
+                             if self.model.cfg.family == "vlm" else 0)
+        caches = self.init_cache(B, pos0 + gen + pad)
+
+        t0 = time.time()
+        tok0, caches = self._prefill(params, batch, caches)
+        jax.block_until_ready(tok0)
+        t_prefill = time.time() - t0
+
+        t0 = time.time()
+        if gen > 1:
+            rest, caches = self._decode(params, tok0, caches, pos0,
+                                        steps=gen - 1)
+            jax.block_until_ready(rest)
+            toks = jnp.concatenate([tok0, rest], axis=1)
+        else:
+            toks = tok0
+        t_decode = time.time() - t0
+
+        tally = cache_mod.modeled_cache_bytes(caches)
+        stats = {
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "decode_tok_s": (B * (gen - 1) / max(t_decode, 1e-9))
+                            if gen > 1 else 0.0,
+            "cache_bytes_per_value":
+                cache_mod.bytes_per_value(self.cache_cfg),
+            "cache_ctrl_bytes_per_value":
+                cache_mod.ctrl_bytes_per_value(self.cache_cfg),
+            "cache_data_bytes": tally["data_bytes"],
+            "cache_total_bytes": tally["total_bytes"],
+        }
+        return toks, stats
+
+
+def serve(model: Model, params, batch, gen: int,
+          ctx: QuantCtx | None, scales_groups=None,
+          cache_cfg: Optional[CacheConfig] = None):
     """Greedy batched generation. Returns (tokens [B, gen], stats)."""
-    prefill = jax.jit(lambda p, b, c: model.prefill(
-        p, b, c, ctx=ctx, scales_groups=scales_groups))
-    decode = jax.jit(lambda p, t, c, pos: model.decode_step(
-        p, t, c, pos, ctx=ctx, scales_groups=scales_groups),
-        static_argnums=())
-
-    t0 = time.time()
-    logits, caches = prefill(params, batch, caches)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    pos0 = batch["tokens"].shape[1] + \
-        (model.cfg.frontend_len if model.cfg.family == "vlm" else 0)
-    tok = jnp.argmax(logits, -1)[:, None]
-    out = [tok]
-    t0 = time.time()
-    for i in range(gen - 1):
-        logits, caches = decode(params, tok, caches,
-                                jnp.asarray(pos0 + i, jnp.int32))
-        tok = jnp.argmax(logits, -1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    B = batch["tokens"].shape[0]
-    return jnp.concatenate(out, 1), {
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "decode_tok_s": B * max(gen - 1, 1) / max(t_decode, 1e-9),
-    }
+    engine = DecodeEngine(model, cache_cfg, ctx, scales_groups)
+    return engine.generate(params, batch, gen)
 
 
 def main(argv=None):
@@ -73,6 +155,11 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--sparq", choices=list(SPARQ_PRESETS), default="5opt")
+    ap.add_argument("--kv-cache", choices=("fp32", "bf16", "sparq"),
+                    default="fp32", help="KV-cache storage layout")
+    ap.add_argument("--impl", choices=("reference", "pallas", "auto"),
+                    default="reference",
+                    help="kernel impl for quantized matmuls + cache codec")
     ap.add_argument("--calibrate", type=int, default=2,
                     help="calibration batches (0 = dynamic scales)")
     ap.add_argument("--prequantize", action="store_true",
@@ -97,18 +184,22 @@ def main(argv=None):
     if scfg is not None:
         scales = model.calibrate(params, data.calib_batches(args.calibrate)) \
             if args.calibrate else None
-        ctx = QuantCtx(mode="quantized", cfg=scfg, impl="reference")
+        ctx = QuantCtx(mode="quantized", cfg=scfg, impl=args.impl)
         if args.prequantize:
             from repro.models.quantize import quantize_params
             params = quantize_params(params, scfg.weight_bits)
 
-    caches = model.init_cache(args.batch, args.prompt_len + args.gen + 8,
-                              dtype=jnp.float32)
-    toks, stats = serve(model, params, batch, caches, args.gen, ctx, scales)
-    print(f"arch={cfg.name} sparq={args.sparq} batch={args.batch} "
+    cache_cfg = make_cache_config(args.kv_cache, scfg, args.impl)
+    toks, stats = serve(model, params, batch, args.gen, ctx, scales,
+                        cache_cfg)
+    print(f"arch={cfg.name} sparq={args.sparq} kv-cache={args.kv_cache} "
+          f"impl={args.impl} batch={args.batch} "
           f"prompt={args.prompt_len} gen={args.gen}")
     print(f"prefill {stats['prefill_s']*1e3:.0f} ms | decode "
-          f"{stats['decode_tok_s']:.1f} tok/s")
+          f"{stats['decode_tok_s']:.1f} tok/s | cache "
+          f"{stats['cache_bytes_per_value']:.4f} B/value data "
+          f"(+{stats['cache_ctrl_bytes_per_value']:.4f} ctrl), "
+          f"{stats['cache_total_bytes']/1e6:.2f} MB modeled")
     print("sample:", np.asarray(toks[0, :16]))
     return stats
 

@@ -9,18 +9,18 @@ own and the previous key block only), so prefill cost is O(T·W) not O(T²).
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.models.cache import CacheConfig, CacheStore
 from repro.models.common import ModelConfig, QuantCtx, dense, rope
 
-
-class KVCache(NamedTuple):
-    k: jnp.ndarray          # [B, Tmax, KV, hd]
-    v: jnp.ndarray          # [B, Tmax, KV, hd]
-    pos: jnp.ndarray        # scalar int32: tokens already in cache
+# The bare (k, v, pos) KVCache NamedTuple is replaced by the layout-aware
+# CacheStore (models/cache.py): same (k, v, pos) shape, but each plane is a
+# CachedTensor that may hold fp or SPARQ-packed int8 storage.
+KVCache = CacheStore
 
 
 def _split_heads(x, n_heads):
@@ -156,45 +156,45 @@ def local_attention(q, k, v, *, window: int, q_offset=0):
     return out[:, :T].astype(q.dtype)
 
 
-def decode_attention(q, cache: KVCache, *, window: int = 0):
-    """Single-token decode against a cache. q [B,1,H,hd]."""
+def decode_attention(q, cache: CacheStore, *, window: int = 0):
+    """Single-token decode against a cache. q [B,1,H,hd]. The cache planes
+    are read through CachedTensor.read() — for the sparq layout that is the
+    §5.1 meta-decode (codes << ShiftCtrl) plus the per-site scale."""
     B, _, H, hd = q.shape
-    KV = cache.k.shape[2]
+    k, v = cache.kv()
+    KV = k.shape[2]
     G = H // KV
     scale = hd ** -0.5
     qg = q.reshape(B, 1, KV, G, hd)
-    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache.k,
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
                    preferred_element_type=jnp.float32) * scale
-    kpos = jnp.arange(cache.k.shape[1])
+    kpos = jnp.arange(k.shape[1])
     allow = kpos < cache.pos
     if window:
         allow &= kpos >= cache.pos - window
     s = jnp.where(allow[None, None, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(cache.v.dtype), cache.v)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
 def cache_init(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> KVCache:
+               dtype=jnp.bfloat16,
+               cache_cfg: Optional[CacheConfig] = None) -> CacheStore:
+    cc = cache_cfg or CacheConfig(layout="fp", dtype=dtype)
     shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
-                   pos=jnp.zeros((), jnp.int32))
+    return CacheStore.init(shape, cc)
 
 
-def cache_update(cache: KVCache, k_new, v_new) -> KVCache:
-    """Insert [B, T_new, KV, hd] at cache.pos (T_new static)."""
-    T_new = k_new.shape[1]
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.astype(cache.k.dtype), cache.pos, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.astype(cache.v.dtype), cache.pos, axis=1)
-    return KVCache(k=k, v=v, pos=cache.pos + T_new)
+def cache_update(cache: CacheStore, k_new, v_new) -> CacheStore:
+    """Insert [B, T_new, KV, hd] at cache.pos (T_new static). Sparq-layout
+    planes quantize on write (per-site scale frozen at first write)."""
+    return cache.update(k_new, v_new)
 
 
 def attention_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
                     positions: jnp.ndarray,
-                    cache: Optional[KVCache] = None,
+                    cache: Optional[CacheStore] = None,
                     mode: str = "train",     # train | prefill | decode
                     window: int = 0,
                     prefix_len: int = 0,

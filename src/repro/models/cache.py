@@ -1,0 +1,267 @@
+"""SPARQ-quantized KV-cache subsystem: one cache API for every layout.
+
+`CacheConfig` picks the storage layout for all decode-time state:
+
+  fp     — today's behavior: float planes in `dtype` (fp32 / bf16);
+  sparq  — the paper's §5.1 packed format: each cached tensor is stored as
+           int8 *window codes* (the n-bit data nibble in sign-magnitude,
+           or the full 8-bit magnitude for vSPARQ mux'd lanes) plus one
+           packed meta byte per lane pair [mux(1)|shift_hi(3)|shift_lo(3)],
+           produced by `kernels.sparq_quantize` and decoded on read by
+           `kernels.sparq_dequantize` (reference or Pallas impl), then
+           rescaled by a per-site scale.
+
+Scales are *per site*: every cache plane (each layer's K, V, MLA latent,
+ring buffer, ...) carries its own f32 scale, calibrated from the first
+write (the prefill pass — decode writes reuse the frozen scale so the
+decode loop stays a fixed-point program under `lax.scan`).
+
+`CachedTensor` is the single storage plane; `CacheStore` replaces the old
+bare `KVCache` NamedTuple (k, v, pos). Both are jit/scan-transparent
+pytrees: layout/codec/impl are static metadata, arrays are leaves, so the
+existing stacked-layer `lax.scan` machinery in `transformer.stack_apply`
+carries them unchanged.
+
+Footprint accounting splits the §5.1 format into two planes:
+  data plane — n data bits per value + 1 MuxCtrl bit per vSPARQ pair
+               (`bytes_per_value`, the headline cache-residency figure:
+               0.5625 B/value for 4-bit 5opt);
+  ctrl plane — the 3-bit ShiftCtrl per value (`ctrl_bytes_per_value`,
+               0.375 B/value), reported separately because on hardware it
+               streams with the (much smaller) metadata side-band.
+The roofline model in `kernels.ops.bytes_per_value` reports the combined
+figure for the matmul path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QScale
+from repro.core.sparq import SparqConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Decode-time cache storage policy (static; hashable jit argument)."""
+    layout: str = "fp"                     # fp | sparq
+    dtype: Any = jnp.bfloat16              # storage dtype for fp layout
+    sparq: Optional[SparqConfig] = None    # codec for sparq layout
+    impl: str = "auto"                     # reference | pallas | auto
+
+    def __post_init__(self):
+        if self.layout not in ("fp", "sparq"):
+            raise ValueError(f"unknown cache layout {self.layout!r}")
+        if self.layout == "sparq" and self.sparq is None:
+            # plain int8 storage (SPARQ trimming disabled) by default
+            object.__setattr__(
+                self, "sparq", SparqConfig(enabled=False, signed=True))
+
+    @staticmethod
+    def fp32() -> "CacheConfig":
+        return CacheConfig(layout="fp", dtype=jnp.float32)
+
+    @staticmethod
+    def bf16() -> "CacheConfig":
+        return CacheConfig(layout="fp", dtype=jnp.bfloat16)
+
+    @staticmethod
+    def sparq_cache(cfg: Optional[SparqConfig] = None,
+                    impl: str = "auto") -> "CacheConfig":
+        cfg = cfg or SparqConfig.opt5(signed=True)
+        if not cfg.signed:
+            cfg = dataclasses.replace(cfg, signed=True)  # K/V are signed
+        return CacheConfig(layout="sparq", sparq=cfg, impl=impl)
+
+
+def bytes_per_value(cc: CacheConfig) -> float:
+    """Modeled HBM residency of the cache *data plane*, bytes per value."""
+    if cc.layout == "fp":
+        return float(jnp.dtype(cc.dtype).itemsize)
+    s = cc.sparq
+    if not s.enabled:
+        return 1.0                          # plain int8
+    mux = 0.5 if s.vsparq else 0.0          # 1 MuxCtrl bit per pair
+    return (s.bits + mux) / 8.0
+
+
+def ctrl_bytes_per_value(cc: CacheConfig) -> float:
+    """Modeled ShiftCtrl side-band residency, bytes per value."""
+    if cc.layout == "fp" or not cc.sparq.enabled:
+        return 0.0
+    return 3.0 / 8.0
+
+
+# ----------------------------------------------------------------------
+# CachedTensor: one storage plane
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("data", "meta", "scale"),
+                   meta_fields=("layout", "codec", "impl"))
+@dataclasses.dataclass
+class CachedTensor:
+    """One cache plane with time axis 1: [B, Tmax, ...rest].
+
+    fp layout:    data float [B, Tmax, ...]; meta None; scale unused (1.0).
+    sparq layout: data int8 window codes; meta int8 packed ShiftCtrl/MuxCtrl
+                  byte per lane; scale f32 scalar (0.0 = uncalibrated
+                  sentinel, set from the first write's dynamic range).
+    """
+    data: jnp.ndarray
+    meta: Optional[jnp.ndarray]
+    scale: jnp.ndarray
+    layout: str = "fp"
+    codec: Optional[SparqConfig] = None
+    impl: str = "auto"
+
+    # -------------------------------------------------------------- init
+    @staticmethod
+    def init(shape, cc: CacheConfig) -> "CachedTensor":
+        if cc.layout == "fp":
+            return CachedTensor(data=jnp.zeros(shape, cc.dtype), meta=None,
+                                scale=jnp.ones((), jnp.float32))
+        assert shape[-1] % 2 == 0, \
+            f"sparq cache pairs adjacent lanes; last dim must be even: {shape}"
+        return CachedTensor(data=jnp.zeros(shape, jnp.int8),
+                            meta=jnp.zeros(shape, jnp.int8),
+                            scale=jnp.zeros((), jnp.float32),
+                            layout="sparq", codec=cc.sparq, impl=cc.impl)
+
+    @staticmethod
+    def fp(data: jnp.ndarray) -> "CachedTensor":
+        """Wrap an existing float array as an fp plane (cross-attn K/V)."""
+        return CachedTensor(data=data, meta=None,
+                            scale=jnp.ones((), jnp.float32))
+
+    # ------------------------------------------------------------- write
+    def _resolve_scale(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Per-site scale: frozen once calibrated (scale > 0), else set
+        from this write's dynamic range (the prefill pass)."""
+        dyn = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-8) \
+            / self.codec.max_val
+        return jnp.where(self.scale > 0, self.scale, dyn)
+
+    def _encode(self, x: jnp.ndarray, scale: jnp.ndarray):
+        # sparq_quantize emits reconstructed codes (window << shift); the
+        # pack shifts them back down to window form. The extra elementwise
+        # pass is deliberate: it keeps the quant kernel's public contract
+        # (codes ready for an int matmul) unchanged, and is noise next to
+        # the attention matmuls on the simulated (non-TPU) path.
+        from repro.kernels.ops import sparq_pack, sparq_quantize
+        qs = QScale(scale=scale, bits=self.codec.act_bits,
+                    signed=self.codec.signed)
+        codes, meta = sparq_quantize(x.astype(jnp.float32), qs, self.codec,
+                                     impl=self.impl)
+        return sparq_pack(codes, meta), meta
+
+    def append(self, x_new: jnp.ndarray, pos: jnp.ndarray) -> "CachedTensor":
+        """Insert [B, T_new, ...] at time offset `pos` (T_new static)."""
+        if self.layout == "fp":
+            data = jax.lax.dynamic_update_slice_in_dim(
+                self.data, x_new.astype(self.data.dtype), pos, axis=1)
+            return dataclasses.replace(self, data=data)
+        scale = self._resolve_scale(x_new)
+        store, meta = self._encode(x_new, scale)
+        data = jax.lax.dynamic_update_slice_in_dim(
+            self.data, store, pos, axis=1)
+        meta = jax.lax.dynamic_update_slice_in_dim(
+            self.meta, meta, pos, axis=1)
+        return dataclasses.replace(self, data=data, meta=meta, scale=scale)
+
+    def write_slots(self, x_new: jnp.ndarray,
+                    slots: jnp.ndarray) -> "CachedTensor":
+        """Scatter [B, T_new, ...] into ring slots along axis 1."""
+        if self.layout == "fp":
+            data = self.data.at[:, slots].set(x_new.astype(self.data.dtype))
+            return dataclasses.replace(self, data=data)
+        scale = self._resolve_scale(x_new)
+        store, meta = self._encode(x_new, scale)
+        data = self.data.at[:, slots].set(store)
+        meta = self.meta.at[:, slots].set(meta)
+        return dataclasses.replace(self, data=data, meta=meta, scale=scale)
+
+    # -------------------------------------------------------------- read
+    def read(self, dtype=None) -> jnp.ndarray:
+        """Dequantized full plane (decode-time attention consumes this)."""
+        if self.layout == "fp":
+            return self.data if dtype is None else self.data.astype(dtype)
+        from repro.kernels.ops import sparq_dequantize
+        codes = sparq_dequantize(self.data, self.meta, impl=self.impl)
+        out = codes.astype(jnp.float32) * self.scale
+        return out if dtype is None else out.astype(dtype)
+
+    @property
+    def n_values(self) -> int:
+        return int(self.data.size)
+
+
+# ----------------------------------------------------------------------
+# CacheStore: the (k, v, pos) KV cache — replaces the bare KVCache tuple
+# ----------------------------------------------------------------------
+
+class CacheStore(NamedTuple):
+    """Full-attention KV cache: two CachedTensor planes + write position."""
+    k: CachedTensor
+    v: CachedTensor
+    pos: jnp.ndarray        # scalar int32: tokens already in cache
+
+    @staticmethod
+    def init(shape, cc: CacheConfig) -> "CacheStore":
+        return CacheStore(k=CachedTensor.init(shape, cc),
+                          v=CachedTensor.init(shape, cc),
+                          pos=jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def from_kv(k: jnp.ndarray, v: jnp.ndarray, pos) -> "CacheStore":
+        """Wrap plain float K/V arrays (encoder cross-attention)."""
+        return CacheStore(k=CachedTensor.fp(k), v=CachedTensor.fp(v),
+                          pos=jnp.asarray(pos, jnp.int32))
+
+    def update(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "CacheStore":
+        T_new = k_new.shape[1]
+        return CacheStore(k=self.k.append(k_new, self.pos),
+                          v=self.v.append(v_new, self.pos),
+                          pos=self.pos + T_new)
+
+    def kv(self, dtype=None):
+        return self.k.read(dtype), self.v.read(dtype)
+
+
+# ----------------------------------------------------------------------
+# footprint accounting
+# ----------------------------------------------------------------------
+
+def modeled_cache_bytes(caches) -> dict:
+    """Walk a cache pytree; model packed HBM residency per §5.1.
+
+    CachedTensor planes are charged `bytes_per_value` (+ ShiftCtrl plane);
+    any other array leaf (recurrent state, slot indices, positions) is
+    charged its actual dtype size.
+    """
+    tally = {"data_bytes": 0.0, "ctrl_bytes": 0.0, "values": 0,
+             "other_bytes": 0.0}
+
+    def visit(node):
+        if isinstance(node, CachedTensor):
+            cc = CacheConfig(layout=node.layout,
+                             dtype=node.data.dtype,
+                             sparq=node.codec, impl=node.impl) \
+                if node.layout == "sparq" else \
+                CacheConfig(layout="fp", dtype=node.data.dtype)
+            tally["data_bytes"] += node.n_values * bytes_per_value(cc)
+            tally["ctrl_bytes"] += node.n_values * ctrl_bytes_per_value(cc)
+            tally["values"] += node.n_values
+        else:
+            tally["other_bytes"] += node.size * node.dtype.itemsize
+        return node
+
+    jax.tree.map(visit, caches,
+                 is_leaf=lambda n: isinstance(n, CachedTensor))
+    tally["total_bytes"] = (tally["data_bytes"] + tally["ctrl_bytes"] +
+                            tally["other_bytes"])
+    return tally

@@ -26,6 +26,7 @@ class CNNConfig:
     stages: tuple = (1, 1, 1)    # residual blocks per stage
     img_size: int = 32
     in_channels: int = 3
+    noise: float = 0.45          # additive pixel noise (task difficulty)
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -131,22 +132,28 @@ def accuracy(params, batch, cfg: CNNConfig,
     return jnp.mean((jnp.argmax(logits, -1) == batch["label"]))
 
 
-def recalibrate_bn(params, batches, cfg: CNNConfig, momentum=0.1):
-    """Paper §5: recompute BN running stats on the calibration set."""
+def recalibrate_bn(params, batches, cfg: CNNConfig):
+    """Paper §5: recompute BN running stats on the calibration set.
+
+    Cumulative average over the calibration batches (momentum 1/i), so the
+    result is the calibration-set statistics themselves — an EMA from the
+    init stats would keep (1-m)^k of the stale zeros/ones and leave eval
+    normalization biased for small calibration sets."""
     params = jax.tree.map(lambda a: a, params)  # shallow copy
 
-    def update(bn, mean, var):
+    def update(bn, mean, var, momentum):
         bn["mean"] = (1 - momentum) * bn["mean"] + momentum * mean
         bn["var"] = (1 - momentum) * bn["var"] + momentum * var
 
-    for batch in batches:
+    for i, batch in enumerate(batches):
+        momentum = 1.0 / (i + 1)
         _, stats = forward(params, batch["image"], cfg, train=True)
-        update(params["stem"]["bn"], *stats["stem"])
+        update(params["stem"]["bn"], *stats["stem"], momentum)
         for si, stage in enumerate(params["stages"]):
             for bi, blk in enumerate(stage):
                 (m1, v1), (m2, v2) = stats[f"s{si}b{bi}"]
-                update(blk["bn1"], m1, v1)
-                update(blk["bn2"], m2, v2)
+                update(blk["bn1"], m1, v1, momentum)
+                update(blk["bn2"], m2, v2, momentum)
     return params
 
 
@@ -166,5 +173,5 @@ def synthetic_dataset(key, cfg: CNNConfig, n: int):
                    (jnp.cos(a)[:, None, None] * xx[None] +
                     jnp.sin(a)[:, None, None] * yy[None]) + phase[:, None, None])
     img = wave[..., None].repeat(cfg.in_channels, -1)
-    img = img + 0.45 * jax.random.normal(k3, img.shape)
+    img = img + cfg.noise * jax.random.normal(k3, img.shape)
     return {"image": img.astype(jnp.float32), "label": labels}

@@ -14,13 +14,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import flash_attention
+from repro.models.cache import CacheConfig, CachedTensor
 from repro.models.common import ModelConfig, QuantCtx, dense, init_dense, rope
 from repro.models.quantize import as_weight
 
 
 class MLACache(NamedTuple):
-    c_kv: jnp.ndarray      # [B, Tmax, r]
-    k_pe: jnp.ndarray      # [B, Tmax, rope_dim]
+    c_kv: CachedTensor     # [B, Tmax, r] latent plane (fp or sparq layout)
+    k_pe: CachedTensor     # [B, Tmax, rope_dim] shared RoPE key plane
     pos: jnp.ndarray
 
 
@@ -67,18 +68,19 @@ def mla_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
     new_cache = None
     if mode in ("prefill", "decode"):
         assert cache is not None
-        c_full = jax.lax.dynamic_update_slice_in_dim(
-            cache.c_kv, c_kv.astype(cache.c_kv.dtype), cache.pos, axis=1)
-        pe_full = jax.lax.dynamic_update_slice_in_dim(
-            cache.k_pe, k_pe.astype(cache.k_pe.dtype), cache.pos, axis=1)
-        new_cache = MLACache(c_full, pe_full, cache.pos + T)
+        new_cache = MLACache(cache.c_kv.append(c_kv, cache.pos),
+                             cache.k_pe.append(k_pe, cache.pos),
+                             cache.pos + T)
 
     if mode == "decode":
-        # absorbed form: attend in latent space
+        # absorbed form: attend in latent space (cache planes dequantized
+        # on read — the sparq layout's meta-decode + per-site scale)
+        c_full = new_cache.c_kv.read(x.dtype)
+        pe_full = new_cache.k_pe.read(x.dtype)
         wuk = as_weight(params["w_uk"], x.dtype).reshape(r, H, dn)
         q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, wuk)
-        s = (jnp.einsum("bthr,bsr->bhts", q_lat, c_full.astype(x.dtype)) +
-             jnp.einsum("bthe,bse->bhts", q_pe, pe_full.astype(x.dtype)))
+        s = (jnp.einsum("bthr,bsr->bhts", q_lat, c_full) +
+             jnp.einsum("bthe,bse->bhts", q_pe, pe_full))
         s = s.astype(jnp.float32) * (dn + dr) ** -0.5
         kpos = jnp.arange(c_full.shape[1])
         s = jnp.where((kpos < new_cache.pos)[None, None, None], s, -jnp.inf)
@@ -108,8 +110,10 @@ def mla_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
 
 
 def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16) -> MLACache:
+                   dtype=jnp.bfloat16,
+                   cache_cfg: Optional[CacheConfig] = None) -> MLACache:
+    cc = cache_cfg or CacheConfig(layout="fp", dtype=dtype)
     return MLACache(
-        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
-        k_pe=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        c_kv=CachedTensor.init((batch, max_len, cfg.kv_lora_rank), cc),
+        k_pe=CachedTensor.init((batch, max_len, cfg.qk_rope_dim), cc),
         pos=jnp.zeros((), jnp.int32))

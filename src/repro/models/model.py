@@ -119,9 +119,13 @@ class Model:
         return total, {"lm_loss": lm, **aux}
 
     # ------------------------------------------------------------ serve
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   cache_cfg=None):
+        """Decode-time cache stack. `cache_cfg` (models.cache.CacheConfig)
+        selects the storage layout — fp (in `dtype`) or sparq (§5.1 packed
+        int8 codes + meta, quantized on write / meta-decoded on read)."""
         return tr.stack_cache_init(self.cfg, self.kinds, batch, max_len,
-                                   dtype)
+                                   dtype, cache_cfg)
 
     def prefill(self, params, batch: Dict, caches,
                 ctx: Optional[QuantCtx] = None, scales_groups=None):

@@ -61,5 +61,8 @@ def is_qweight(w) -> bool:
 def as_weight(w, dtype) -> jnp.ndarray:
     """Dequantize a (possibly) quantized weight leaf to a float array."""
     if is_qweight(w):
-        return (w["q"].astype(jnp.float32) * w["s"]).astype(dtype)
+        s = w["s"]
+        if w["q"].ndim == 3 and s.ndim == 2:
+            s = s[:, None, :]   # stacked [L, din, dout] x scales [L, dout]
+        return (w["q"].astype(jnp.float32) * s).astype(dtype)
     return w.astype(dtype)

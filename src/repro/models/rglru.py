@@ -92,8 +92,14 @@ def rglru_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
     hs, h_last = _lru_scan(a, bx, h0, impl)
     hs = hs.astype(x.dtype)
     out = dense(params["w_out"], hs * gate, "rg_out", ctx)
-    new_cache = RGLRUCache(h=h_last.astype(x.dtype), conv=conv_cache) \
-        if (cache is not None or mode != "train") else None
+    if cache is not None:
+        # match the carried cache dtypes (fixed-point scan carry)
+        new_cache = RGLRUCache(h=h_last.astype(cache.h.dtype),
+                               conv=conv_cache.astype(cache.conv.dtype))
+    elif mode != "train":
+        new_cache = RGLRUCache(h=h_last.astype(x.dtype), conv=conv_cache)
+    else:
+        new_cache = None
     return out, new_cache
 
 

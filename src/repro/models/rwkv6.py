@@ -158,10 +158,18 @@ def time_mix(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
     y = (yf.reshape(B, T, D) * params["ln_x_scale"] +
          params["ln_x_bias"]).astype(x.dtype)
     out = dense(params["w_o"], y * g, "tm_out", ctx)
-    new_cache = RWKVCache(state=state, tm_last=x[:, -1],
-                          cm_last=cache.cm_last if cache is not None else
-                          jnp.zeros((B, D), x.dtype)) \
-        if cache is not None or mode != "train" else None
+    if cache is not None or mode != "train":
+        # keep the carried state's dtypes (a lax.scan decode loop needs a
+        # fixed-point carry; compute may run in a different dtype)
+        new_cache = RWKVCache(
+            state=state.astype(cache.state.dtype) if cache is not None
+            else state,
+            tm_last=x[:, -1].astype(cache.tm_last.dtype)
+            if cache is not None else x[:, -1],
+            cm_last=cache.cm_last if cache is not None
+            else jnp.zeros((B, D), x.dtype))
+    else:
+        new_cache = None
     return out, new_cache
 
 

@@ -21,34 +21,38 @@ from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import rglru as rg_mod
 from repro.models import rwkv6 as rwkv_mod
-from repro.models.attention import KVCache
+from repro.models.cache import CacheConfig, CachedTensor, CacheStore
 from repro.models.common import ModelConfig, QuantCtx, norm, norm_init
 from repro.models.quantize import as_weight
 
 
 class RingKVCache(NamedTuple):
-    """Sliding-window KV ring buffer (local attention decode)."""
-    k: jnp.ndarray          # [B, W, KV, hd]
-    v: jnp.ndarray
+    """Sliding-window KV ring buffer (local attention decode). The k/v
+    planes are CachedTensors, so the ring stores fp or sparq layout."""
+    k: CachedTensor         # [B, W, KV, hd]
+    v: CachedTensor
     slot_pos: jnp.ndarray   # [B, W] absolute position per slot (-1 empty)
     pos: jnp.ndarray        # scalar: next absolute position
 
 
-def ring_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> RingKVCache:
+def ring_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16,
+              cache_cfg: Optional[CacheConfig] = None) -> RingKVCache:
+    cc = cache_cfg or CacheConfig(layout="fp", dtype=dtype)
     W = cfg.local_window
     shape = (batch, W, cfg.n_kv_heads, cfg.head_dim)
-    return RingKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+    return RingKVCache(CachedTensor.init(shape, cc),
+                       CachedTensor.init(shape, cc),
                        jnp.full((batch, W), -1, jnp.int32),
                        jnp.zeros((), jnp.int32))
 
 
 def ring_insert(cache: RingKVCache, k_new, v_new) -> RingKVCache:
     """Insert T_new tokens (T_new <= W) at rolling slots."""
-    B, T_new = k_new.shape[0], k_new.shape[1]
-    W = cache.k.shape[1]
+    T_new = k_new.shape[1]
+    W = cache.k.data.shape[1]
     slots = (cache.pos + jnp.arange(T_new)) % W
-    k = cache.k.at[:, slots].set(k_new.astype(cache.k.dtype))
-    v = cache.v.at[:, slots].set(v_new.astype(cache.v.dtype))
+    k = cache.k.write_slots(k_new, slots)
+    v = cache.v.write_slots(v_new, slots)
     sp = cache.slot_pos.at[:, slots].set(
         (cache.pos + jnp.arange(T_new))[None, :])
     return RingKVCache(k, v, sp, cache.pos + T_new)
@@ -57,17 +61,18 @@ def ring_insert(cache: RingKVCache, k_new, v_new) -> RingKVCache:
 def ring_decode_attention(q, cache: RingKVCache, window: int):
     """q [B,1,H,hd] against the ring. Mask by per-slot absolute position."""
     B, _, H, hd = q.shape
-    KV = cache.k.shape[2]
+    k, v = cache.k.read(), cache.v.read()
+    KV = k.shape[2]
     G = H // KV
     qg = q.reshape(B, 1, KV, G, hd)
-    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache.k,
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
                    preferred_element_type=jnp.float32) * hd ** -0.5
     cur = cache.pos - 1  # position of the token being decoded
     ok = (cache.slot_pos >= 0) & (cache.slot_pos <= cur) & \
          (cache.slot_pos > cur - window)
     s = jnp.where(ok[:, None, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(cache.v.dtype), cache.v)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
@@ -134,28 +139,38 @@ def block_init(key, cfg: ModelConfig, kind: str, dtype=jnp.float32) -> Dict:
 
 
 def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16,
+                     cache_cfg: Optional[CacheConfig] = None):
+    cc = cache_cfg or CacheConfig(layout="fp", dtype=dtype)
+    state_dtype = cc.dtype if cc.layout == "fp" else dtype
     if kind in ("dense", "moe", "enc"):
-        return attn_mod.cache_init(cfg, batch, max_len, dtype)
+        return attn_mod.cache_init(cfg, batch, max_len, cache_cfg=cc)
     if kind in ("mla_dense", "mla_moe"):
-        return mla_mod.mla_cache_init(cfg, batch, max_len, dtype)
+        return mla_mod.mla_cache_init(cfg, batch, max_len, cache_cfg=cc)
     if kind == "rwkv":
+        # O(1) recurrent state, overwritten every step — quantized storage
+        # would accumulate error, so the sparq layout doesn't apply here;
+        # the cache config still controls the fp storage dtype.
         H = cfg.d_model // cfg.head_size
         return rwkv_mod.RWKVCache(
-            state=jnp.zeros((batch, H, cfg.head_size, cfg.head_size), dtype),
-            tm_last=jnp.zeros((batch, cfg.d_model), dtype),
-            cm_last=jnp.zeros((batch, cfg.d_model), dtype))
+            state=jnp.zeros((batch, H, cfg.head_size, cfg.head_size),
+                            state_dtype),
+            tm_last=jnp.zeros((batch, cfg.d_model), state_dtype),
+            cm_last=jnp.zeros((batch, cfg.d_model), state_dtype))
     if kind == "rg_rec":
-        return rg_mod.rglru_cache_init(cfg, batch, dtype)
+        return rg_mod.rglru_cache_init(cfg, batch, state_dtype)
     if kind == "rg_attn":
-        return ring_init(cfg, batch, dtype)
+        return ring_init(cfg, batch, cache_cfg=cc)
     if kind == "dec":
         # self-attention cache + cross k/v (filled at prefill)
-        return {"self": attn_mod.cache_init(cfg, batch, max_len, dtype),
+        return {"self": attn_mod.cache_init(cfg, batch, max_len,
+                                            cache_cfg=cc),
                 "cross_k": jnp.zeros(
-                    (batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    (batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                    state_dtype),
                 "cross_v": jnp.zeros(
-                    (batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)}
+                    (batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                    state_dtype)}
     raise ValueError(kind)
 
 
@@ -243,7 +258,8 @@ def block_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig, kind: str, *,
         cm_last = cache.cm_last if cache is not None else None
         o = rwkv_mod.channel_mix(params, h, cfg, last=cm_last, ctx=ctx)
         if new_cache is not None:
-            new_cache = new_cache._replace(cm_last=h[:, -1])
+            new_cache = new_cache._replace(
+                cm_last=h[:, -1].astype(new_cache.cm_last.dtype))
         x = _res(x, o)
         return x, new_cache, aux
 
@@ -277,8 +293,7 @@ def block_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig, kind: str, *,
             jnp.matmul(h, as_weight(params["xattn"]["wq"], x.dtype)), cfg.n_heads)
         if mode == "decode":
             o = attn_mod.decode_attention(
-                q, attn_mod.KVCache(ck, cv,
-                                    jnp.asarray(ck.shape[1], jnp.int32)))
+                q, CacheStore.from_kv(ck, cv, ck.shape[1]))
         else:
             o = attn_mod.flash_attention(q, ck, cv, causal=False,
                                          q_chunk=cfg.attn_chunk,
@@ -347,10 +362,11 @@ def _group_runs(kinds: list[str]) -> list[tuple[str, int]]:
 
 
 def stack_cache_init(cfg: ModelConfig, kinds: list[str], batch: int,
-                     max_len: int, dtype=jnp.bfloat16) -> list:
+                     max_len: int, dtype=jnp.bfloat16,
+                     cache_cfg: Optional[CacheConfig] = None) -> list:
     out = []
     for kind, count in _group_runs(kinds):
-        one = block_cache_init(cfg, kind, batch, max_len, dtype)
+        one = block_cache_init(cfg, kind, batch, max_len, dtype, cache_cfg)
         out.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (count,) + x.shape).copy()
             if x.ndim else jnp.broadcast_to(x, (count,)).copy(), one))

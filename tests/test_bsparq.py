@@ -1,8 +1,17 @@
-"""Bit-exact tests of bSPARQ against the paper's worked examples (§3.1)."""
+"""Bit-exact tests of bSPARQ against the paper's worked examples (§3.1).
+
+Property-based tests need `hypothesis`; when it is absent they are skipped
+(the worked examples and the exhaustive uint8 smoke sweeps below still run,
+so the module always tests something)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI images
+    HAVE_HYPOTHESIS = False
 
 from repro.core.bsparq import bsparq_encode, bsparq_recon, bsparq_recon_signed, shifts_for
 from repro.core.bitops import msb_pos, select_shift
@@ -74,66 +83,107 @@ class TestRounding:
             assert recon(0, n, opts, rounding=True) == 0
 
 
-@st.composite
-def uint8s(draw):
-    return draw(st.integers(min_value=0, max_value=255))
+class TestExhaustiveSmoke:
+    """Deterministic sweeps over the full uint8 domain — the non-hypothesis
+    versions of the properties below (all 256 inputs, no sampling)."""
+    ALL = np.arange(256)
 
-
-class TestProperties:
-    @given(st.lists(uint8s(), min_size=1, max_size=64))
-    @settings(max_examples=200, deadline=None)
-    def test_window_covers_msb_exact_small_values(self, xs):
-        """Values below 2**n are always exact under trim (window [n-1:0])."""
-        x = jnp.asarray(xs)
+    def test_small_values_exact_under_trim(self):
+        x = jnp.asarray(self.ALL)
         for n, opts in [(4, 5), (4, 3), (4, 2), (3, 6), (2, 7)]:
             r = np.asarray(bsparq_recon(x, n, shifts_for(n, opts), False))
-            small = np.asarray(x) < (1 << n)
-            np.testing.assert_array_equal(r[small], np.asarray(x)[small])
+            small = self.ALL < (1 << n)
+            np.testing.assert_array_equal(r[small], self.ALL[small])
 
-    @given(st.lists(uint8s(), min_size=1, max_size=64))
-    @settings(max_examples=200, deadline=None)
-    def test_more_opts_never_worse(self, xs):
-        """Trim error is monotone in placement options: 5opt <= 3opt <= 2opt."""
-        x = np.asarray(xs)
+    def test_trim_underestimates_and_opts_monotone(self):
         errs = {}
         for opts in (5, 3, 2):
-            r = np.asarray(bsparq_recon(jnp.asarray(x), 4, shifts_for(4, opts), False))
-            errs[opts] = np.abs(x - r)
+            r = np.asarray(bsparq_recon(jnp.asarray(self.ALL), 4,
+                                        shifts_for(4, opts), False))
+            assert (r <= self.ALL).all() and (r >= 0).all()
+            errs[opts] = np.abs(self.ALL - r)
         assert (errs[5] <= errs[3]).all()
         assert (errs[3] <= errs[2]).all()
 
-    @given(st.lists(uint8s(), min_size=1, max_size=64))
-    @settings(max_examples=200, deadline=None)
-    def test_trim_underestimates(self, xs):
-        """Trim (no rounding) never overshoots: recon <= x, error < 2**shift_max."""
-        x = np.asarray(xs)
-        for n, opts in [(4, 5), (4, 3), (4, 2), (3, 6), (2, 7)]:
-            r = np.asarray(bsparq_recon(jnp.asarray(x), n, shifts_for(n, opts), False))
-            assert (r <= x).all()
-            assert (r >= 0).all()
-
-    @given(st.lists(uint8s(), min_size=4, max_size=256))
-    @settings(max_examples=100, deadline=None)
-    def test_rounding_mse_not_worse(self, xs):
-        """+R never increases total squared error (per-value it rounds to
-        nearest within the same window, carries re-encode exactly)."""
-        x = np.asarray(xs, dtype=np.int64)
+    def test_rounding_mse_not_worse_exhaustive(self):
+        x = self.ALL.astype(np.int64)
         for n, opts in [(4, 5), (4, 3), (4, 2)]:
             sh = shifts_for(n, opts)
-            rt = np.asarray(bsparq_recon(jnp.asarray(x), n, sh, False), dtype=np.int64)
-            rr = np.asarray(bsparq_recon(jnp.asarray(x), n, sh, True), dtype=np.int64)
+            rt = np.asarray(bsparq_recon(jnp.asarray(x), n, sh, False),
+                            dtype=np.int64)
+            rr = np.asarray(bsparq_recon(jnp.asarray(x), n, sh, True),
+                            dtype=np.int64)
             assert ((x - rr) ** 2).sum() <= ((x - rt) ** 2).sum()
 
-    @given(st.lists(st.integers(min_value=-127, max_value=127), min_size=1,
-                    max_size=64))
-    @settings(max_examples=100, deadline=None)
-    def test_signed_is_odd_function(self, xs):
-        x = jnp.asarray(xs)
+    def test_signed_is_odd_function_exhaustive(self):
+        x = jnp.asarray(np.arange(-127, 128))
         for n, opts in [(4, 5), (4, 3)]:
             sh = shifts_for(n, opts)
             r_pos = np.asarray(bsparq_recon_signed(x, n, sh, True))
             r_neg = np.asarray(bsparq_recon_signed(-x, n, sh, True))
             np.testing.assert_array_equal(r_pos, -r_neg)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def uint8s(draw):
+        return draw(st.integers(min_value=0, max_value=255))
+
+    class TestProperties:
+        @given(st.lists(uint8s(), min_size=1, max_size=64))
+        @settings(max_examples=200, deadline=None)
+        def test_window_covers_msb_exact_small_values(self, xs):
+            """Values below 2**n are always exact under trim (window [n-1:0])."""
+            x = jnp.asarray(xs)
+            for n, opts in [(4, 5), (4, 3), (4, 2), (3, 6), (2, 7)]:
+                r = np.asarray(bsparq_recon(x, n, shifts_for(n, opts), False))
+                small = np.asarray(x) < (1 << n)
+                np.testing.assert_array_equal(r[small], np.asarray(x)[small])
+
+        @given(st.lists(uint8s(), min_size=1, max_size=64))
+        @settings(max_examples=200, deadline=None)
+        def test_more_opts_never_worse(self, xs):
+            """Trim error is monotone in placement options: 5opt <= 3opt <= 2opt."""
+            x = np.asarray(xs)
+            errs = {}
+            for opts in (5, 3, 2):
+                r = np.asarray(bsparq_recon(jnp.asarray(x), 4, shifts_for(4, opts), False))
+                errs[opts] = np.abs(x - r)
+            assert (errs[5] <= errs[3]).all()
+            assert (errs[3] <= errs[2]).all()
+
+        @given(st.lists(uint8s(), min_size=1, max_size=64))
+        @settings(max_examples=200, deadline=None)
+        def test_trim_underestimates(self, xs):
+            """Trim (no rounding) never overshoots: recon <= x, error < 2**shift_max."""
+            x = np.asarray(xs)
+            for n, opts in [(4, 5), (4, 3), (4, 2), (3, 6), (2, 7)]:
+                r = np.asarray(bsparq_recon(jnp.asarray(x), n, shifts_for(n, opts), False))
+                assert (r <= x).all()
+                assert (r >= 0).all()
+
+        @given(st.lists(uint8s(), min_size=4, max_size=256))
+        @settings(max_examples=100, deadline=None)
+        def test_rounding_mse_not_worse(self, xs):
+            """+R never increases total squared error (per-value it rounds to
+            nearest within the same window, carries re-encode exactly)."""
+            x = np.asarray(xs, dtype=np.int64)
+            for n, opts in [(4, 5), (4, 3), (4, 2)]:
+                sh = shifts_for(n, opts)
+                rt = np.asarray(bsparq_recon(jnp.asarray(x), n, sh, False), dtype=np.int64)
+                rr = np.asarray(bsparq_recon(jnp.asarray(x), n, sh, True), dtype=np.int64)
+                assert ((x - rr) ** 2).sum() <= ((x - rt) ** 2).sum()
+
+        @given(st.lists(st.integers(min_value=-127, max_value=127), min_size=1,
+                        max_size=64))
+        @settings(max_examples=100, deadline=None)
+        def test_signed_is_odd_function(self, xs):
+            x = jnp.asarray(xs)
+            for n, opts in [(4, 5), (4, 3)]:
+                sh = shifts_for(n, opts)
+                r_pos = np.asarray(bsparq_recon_signed(x, n, sh, True))
+                r_neg = np.asarray(bsparq_recon_signed(-x, n, sh, True))
+                np.testing.assert_array_equal(r_pos, -r_neg)
 
 
 class TestBitops:

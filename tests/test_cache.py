@@ -1,0 +1,228 @@
+"""SPARQ-quantized KV-cache subsystem + scan-based decode engine.
+
+Covers: CachedTensor fp/sparq layout semantics, CacheStore append/read,
+ring-slot writes, modeled footprint accounting (§5.1 packed format), and
+the end-to-end acceptance: the scan-based DecodeEngine produces identical
+greedy tokens for the fp and sparq(int8, trimming disabled) layouts, and
+matching tokens across engine phases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparq import SparqConfig
+from repro.models.cache import (CacheConfig, CachedTensor, CacheStore,
+                                bytes_per_value, ctrl_bytes_per_value,
+                                modeled_cache_bytes)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestCachedTensor:
+    def test_fp_append_read_exact(self):
+        cc = CacheConfig.fp32()
+        t = CachedTensor.init((2, 8, 4), cc)
+        x = jax.random.normal(KEY, (2, 3, 4))
+        t2 = t.append(x, jnp.int32(2))
+        out = t2.read()
+        np.testing.assert_array_equal(np.asarray(out[:, 2:5]), np.asarray(x))
+        assert np.asarray(out[:, :2] == 0).all()
+
+    def test_sparq_append_read_close(self):
+        cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True))
+        t = CachedTensor.init((2, 8, 4, 16), cc)
+        x = jax.random.normal(KEY, (2, 4, 4, 16))
+        t2 = t.append(x, jnp.int32(0))
+        out = np.asarray(t2.read()[:, :4])
+        rel = np.abs(out - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+        assert rel < 0.12            # 4-bit window + int8 grid error bound
+        assert t2.data.dtype == jnp.int8 and t2.meta.dtype == jnp.int8
+
+    def test_sparq_int8_roundtrip_is_grid_exact(self):
+        """With SPARQ trimming disabled the cache is a plain int8 grid:
+        writing a tensor already on the grid reads back exactly."""
+        cc = CacheConfig.sparq_cache(SparqConfig(enabled=False, signed=True))
+        t = CachedTensor.init((1, 4, 8), cc)
+        codes = jax.random.randint(KEY, (1, 4, 8), -127, 128)
+        codes = codes.at[0, 0, 0].set(127)  # pin the dynamic scale to 0.03
+        scale = 0.03
+        t2 = t.append(codes.astype(jnp.float32) * scale, jnp.int32(0))
+        got = np.asarray(t2.read())
+        np.testing.assert_allclose(
+            got, np.asarray(codes, np.float32) * scale, rtol=1e-6, atol=1e-6)
+
+    def test_scale_frozen_after_first_write(self):
+        """Per-site scale calibrates on the first (prefill) write and stays
+        frozen for decode writes — required for a fixed-point scan carry."""
+        cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True))
+        t = CachedTensor.init((1, 8, 8), cc)
+        x0 = jax.random.normal(KEY, (1, 4, 8))
+        t1 = t.append(x0, jnp.int32(0))
+        s1 = float(t1.scale)
+        assert s1 > 0
+        t2 = t1.append(10.0 * x0[:, :1], jnp.int32(4))  # larger dyn range
+        assert float(t2.scale) == s1
+
+    def test_write_slots_ring(self):
+        cc = CacheConfig.sparq_cache(SparqConfig(enabled=False, signed=True))
+        t = CachedTensor.init((1, 4, 8), cc)
+        x = jnp.ones((1, 2, 8)) * 0.5
+        t2 = t.write_slots(x, jnp.asarray([3, 0]))     # wraparound slots
+        out = np.asarray(t2.read())
+        assert np.abs(out[0, 3] - 0.5).max() < 0.01
+        assert np.abs(out[0, 0] - 0.5).max() < 0.01
+        assert (out[0, 1:3] == 0).all()
+
+    def test_odd_lane_count_rejected(self):
+        cc = CacheConfig.sparq_cache()
+        with pytest.raises(AssertionError):
+            CachedTensor.init((2, 8, 7), cc)
+
+
+class TestCacheStore:
+    def test_update_advances_pos(self):
+        st = CacheStore.init((2, 16, 2, 8), CacheConfig.fp32())
+        k = jax.random.normal(KEY, (2, 5, 2, 8))
+        st = st.update(k, k)
+        st = st.update(k[:, :2], k[:, :2])
+        assert int(st.pos) == 7
+
+    def test_scan_carry_transparent(self):
+        """CacheStore must round-trip a lax.scan carry (the decode loop)."""
+        cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True))
+        st = CacheStore.init((1, 8, 2, 8), cc)
+        st = st.update(jnp.ones((1, 2, 2, 8)), jnp.ones((1, 2, 2, 8)))
+
+        def step(c, _):
+            c = c.update(jnp.ones((1, 1, 2, 8)), jnp.ones((1, 1, 2, 8)))
+            return c, c.pos
+
+        st, ps = jax.lax.scan(step, st, None, length=3)
+        np.testing.assert_array_equal(np.asarray(ps), [3, 4, 5])
+
+
+class TestFootprint:
+    def test_bytes_per_value_presets(self):
+        assert bytes_per_value(CacheConfig.fp32()) == 4.0
+        assert bytes_per_value(CacheConfig.bf16()) == 2.0
+        int8 = CacheConfig.sparq_cache(SparqConfig(enabled=False,
+                                                   signed=True))
+        assert bytes_per_value(int8) == 1.0
+        opt5 = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True))
+        # acceptance: 4-bit 5opt data plane <= 0.57 B/value
+        assert bytes_per_value(opt5) <= 0.57
+        assert ctrl_bytes_per_value(opt5) == pytest.approx(3 / 8)
+        # total matches the §5.1 roofline figure in kernels.ops
+        from repro.kernels.ops import bytes_per_value as roofline_bpv
+        assert bytes_per_value(opt5) + ctrl_bytes_per_value(opt5) == \
+            pytest.approx(roofline_bpv(SparqConfig.opt5(signed=True)))
+
+    def test_modeled_cache_bytes_walk(self):
+        cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True))
+        st = CacheStore.init((2, 16, 2, 8), cc)
+        tally = modeled_cache_bytes([st])
+        n = 2 * 16 * 2 * 8 * 2          # two planes
+        assert tally["values"] == n
+        assert tally["data_bytes"] == pytest.approx(n * 0.5625)
+        assert tally["ctrl_bytes"] == pytest.approx(n * 0.375)
+
+
+# ----------------------------------------------------------------------
+# end-to-end: scan-based decode engine over the cache layouts
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import Model
+    cfg = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 24),
+                                          0, cfg.vocab_size)}
+    return model, params, batch
+
+
+def _engine_tokens(model, params, batch, cache_cfg, gen=12):
+    from repro.launch.serve import DecodeEngine
+    engine = DecodeEngine(model, cache_cfg)
+    toks, stats = engine.generate(params, batch, gen)
+    return np.asarray(toks), stats
+
+
+def test_sparq_int8_layout_matches_fp_greedy(tiny_lm):
+    """Acceptance: identical greedy tokens for the fp layout and the sparq
+    layout with trimming disabled (lossless-on-the-grid int8 path)."""
+    model, params, batch = tiny_lm
+    t_fp, _ = _engine_tokens(model, params, batch, CacheConfig.fp32())
+    t_i8, s = _engine_tokens(
+        model, params, batch,
+        CacheConfig.sparq_cache(SparqConfig(enabled=False, signed=True)))
+    np.testing.assert_array_equal(t_fp, t_i8)
+    assert s["cache_bytes_per_value"] == 1.0
+
+
+def test_sparq_5opt_layout_close_logits(tiny_lm):
+    """The full 4-bit 5opt codec: decode logits stay close to the fp cache
+    (greedy tokens are NOT asserted equal — a randomly-initialized tiny LM
+    has near-zero decision margins, so 4-bit trimming noise can flip
+    argmax; the paper's premise is small *error*, which is what we check),
+    and the modeled data plane hits the §5.1 footprint."""
+    model, params, batch = tiny_lm
+
+    def one_decode_logits(cache_cfg):
+        caches = model.init_cache(2, 40, cache_cfg=cache_cfg)
+        logits, caches = model.prefill(params, batch, caches)
+        tok = jnp.argmax(logits, -1)[:, None]
+        logits, _ = model.decode_step(params, tok, caches,
+                                      jnp.asarray(24, jnp.int32))
+        return np.asarray(logits)
+
+    l_fp = one_decode_logits(CacheConfig.fp32())
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True))
+    l_sq = one_decode_logits(cc)
+    err = np.abs(l_sq - l_fp).mean() / (np.abs(l_fp).mean() + 1e-6)
+    assert err < 0.25               # 4-bit window noise, not garbage
+    assert bytes_per_value(cc) <= 0.57
+    t_sq, s = _engine_tokens(model, params, batch, cc)
+    assert ((t_sq >= 0) & (t_sq < model.cfg.vocab_size)).all()
+    assert s["cache_bytes_per_value"] <= 0.57
+
+
+def test_engine_matches_python_loop(tiny_lm):
+    """The single-scan engine reproduces the step-by-step python loop."""
+    model, params, batch = tiny_lm
+    toks, _ = _engine_tokens(model, params, batch, CacheConfig.fp32(), gen=6)
+    caches = model.init_cache(2, 24 + 6 + 8, cache_cfg=CacheConfig.fp32())
+    logits, caches = model.prefill(params, batch, caches)
+    tok = jnp.argmax(logits, -1)[:, None]
+    got = [tok]
+    for i in range(5):
+        logits, caches = model.decode_step(
+            params, tok, caches, jnp.asarray(24 + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None]
+        got.append(tok)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(got, 1)), toks)
+
+
+def test_make_cache_config_off_preset_is_plain_int8():
+    """--sparq off + --kv-cache sparq must give the lossless int8 grid,
+    not a default trimming codec."""
+    from repro.launch.serve import make_cache_config
+    cc = make_cache_config("sparq", None)
+    assert cc.layout == "sparq" and not cc.sparq.enabled
+    assert bytes_per_value(cc) == 1.0
+    cc5 = make_cache_config("sparq", SparqConfig.opt5(signed=True))
+    assert cc5.sparq.enabled and cc5.sparq.bits == 4
+
+
+def test_serve_cli_sparq_cache():
+    """CLI smoke: --kv-cache sparq + --impl reference end to end."""
+    from repro.launch import serve as S
+    stats = S.main(["--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
+                    "--prompt-len", "16", "--gen", "4", "--sparq", "5opt",
+                    "--kv-cache", "sparq", "--impl", "reference",
+                    "--calibrate", "1"])
+    assert stats["decode_tok_s"] > 0
+    assert stats["cache_bytes_per_value"] <= 0.57

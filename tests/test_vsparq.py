@@ -1,8 +1,17 @@
-"""vSPARQ pairing semantics (paper §3.2, Eq. 2) + STC grouped path (§5.3)."""
+"""vSPARQ pairing semantics (paper §3.2, Eq. 2) + STC grouped path (§5.3).
+
+Property-based tests need `hypothesis`; when it is absent they are skipped
+(the worked examples and the deterministic smoke sweep still run, so the
+module always tests something)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI images
+    HAVE_HYPOTHESIS = False
 
 from repro.core.bsparq import bsparq_recon, shifts_for
 from repro.core.vsparq import vsparq_recon, vsparq_recon_signed, vsparq_recon_grouped
@@ -32,28 +41,44 @@ class TestEq2:
         np.testing.assert_array_equal(r[0], [26, 88, 27, 0])
         np.testing.assert_array_equal(r[1], [0, 255, 13, 13])
 
-    @given(st.lists(st.integers(0, 255), min_size=2, max_size=128)
-           .filter(lambda v: len(v) % 2 == 0))
-    @settings(max_examples=100, deadline=None)
-    def test_error_never_above_bsparq(self, xs):
-        """vSPARQ only ever *upgrades* precision vs plain bSPARQ (Eq. 2)."""
-        x = np.asarray(xs)
+    def test_error_never_above_bsparq_smoke(self):
+        """Deterministic version of the hypothesis property below: vSPARQ
+        only ever *upgrades* precision vs plain bSPARQ (Eq. 2), swept over
+        every (even, odd) uint8 pair built from a stride-7 lattice plus all
+        pairs containing a zero."""
+        a = np.arange(0, 256, 7)
+        pairs = np.stack(np.meshgrid(a, a), -1).reshape(-1, 2)
+        zeros = np.stack([np.arange(256), np.zeros(256, int)], -1)
+        x = np.concatenate([pairs, zeros, zeros[:, ::-1]]).reshape(-1)
         rv = np.asarray(vsparq_recon(jnp.asarray(x), 4, SH, True))
         rb = np.asarray(bsparq_recon(jnp.asarray(x), 4, SH, True))
         assert (np.abs(x - rv) <= np.abs(x - rb)).all()
 
-    @given(st.lists(st.integers(-127, 127), min_size=2, max_size=64)
-           .filter(lambda v: len(v) % 2 == 0))
-    @settings(max_examples=50, deadline=None)
-    def test_signed_pairing(self, xs):
-        x = np.asarray(xs)
-        r = np.asarray(vsparq_recon_signed(jnp.asarray(x), 4, SH, True))
-        # zero-partner lanes are exact
-        pairs = x.reshape(-1, 2)
-        rp = r.reshape(-1, 2)
-        zero_partner = pairs == 0
-        keeps = zero_partner[:, ::-1]  # lane keeps precision if partner zero
-        np.testing.assert_array_equal(rp[keeps], pairs[keeps])
+
+if HAVE_HYPOTHESIS:
+    class TestEq2Properties:
+        @given(st.lists(st.integers(0, 255), min_size=2, max_size=128)
+               .filter(lambda v: len(v) % 2 == 0))
+        @settings(max_examples=100, deadline=None)
+        def test_error_never_above_bsparq(self, xs):
+            """vSPARQ only ever *upgrades* precision vs bSPARQ (Eq. 2)."""
+            x = np.asarray(xs)
+            rv = np.asarray(vsparq_recon(jnp.asarray(x), 4, SH, True))
+            rb = np.asarray(bsparq_recon(jnp.asarray(x), 4, SH, True))
+            assert (np.abs(x - rv) <= np.abs(x - rb)).all()
+
+        @given(st.lists(st.integers(-127, 127), min_size=2, max_size=64)
+               .filter(lambda v: len(v) % 2 == 0))
+        @settings(max_examples=50, deadline=None)
+        def test_signed_pairing(self, xs):
+            x = np.asarray(xs)
+            r = np.asarray(vsparq_recon_signed(jnp.asarray(x), 4, SH, True))
+            # zero-partner lanes are exact
+            pairs = x.reshape(-1, 2)
+            rp = r.reshape(-1, 2)
+            zero_partner = pairs == 0
+            keeps = zero_partner[:, ::-1]  # lane keeps precision if partner zero
+            np.testing.assert_array_equal(rp[keeps], pairs[keeps])
 
 
 class TestSparseTensorCore:
