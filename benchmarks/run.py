@@ -14,31 +14,40 @@ import sys
 import time
 
 
-def decode_cache_rows(out_json: str = "BENCH_decode.json") -> list:
+def decode_cache_rows(out_json: str = "BENCH_decode.json",
+                      impls: tuple = ("reference", "pallas")) -> list:
     """Decode-throughput x cache-layout sweep on the reduced tiny LM:
-    fp32 / bf16 / sparq (§5.1 packed int8) KV caches through the
-    scan-based DecodeEngine."""
+    fp32 / bf16 / sparq (§5.1 packed, fused decode kernel under each impl
+    in `impls`) KV caches through the scan-based DecodeEngine.
+
+    The engine runs a warmup pass first, so decode_tok_s is steady-state
+    execution; the first (compiling) pass is reported as compile_s — the
+    seed's bf16-slower-than-fp32 artifact was compile time, not decode."""
     from repro.launch import serve as serve_mod
     rows, blob = [], {}
-    for layout in ("fp32", "bf16", "sparq"):
+    sweep = [("fp32", "reference"), ("bf16", "reference")] + \
+        [("sparq", impl) for impl in impls]
+    for layout, impl in sweep:
+        tag = layout if layout != "sparq" else f"{layout}_{impl}"
         stats = serve_mod.main([
             "--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
             "--prompt-len", "32", "--gen", "16", "--sparq", "5opt",
-            "--kv-cache", layout, "--calibrate", "1"])
-        blob[layout] = {
+            "--kv-cache", layout, "--impl", impl, "--calibrate", "1"])
+        blob[tag] = {
             "decode_tok_s": round(stats["decode_tok_s"], 2),
             "prefill_s": round(stats["prefill_s"], 4),
+            "compile_s": round(stats["compile_s"], 2),
             "cache_bytes_per_value": stats["cache_bytes_per_value"],
             "cache_ctrl_bytes_per_value":
                 stats["cache_ctrl_bytes_per_value"],
             "cache_total_bytes": stats["cache_total_bytes"],
         }
-        cfg_name = f"tinyllama_reduced_{layout}"
-        rows += [(cfg_name, "decode_tok_s", blob[layout]["decode_tok_s"]),
+        cfg_name = f"tinyllama_reduced_{tag}"
+        rows += [(cfg_name, "decode_tok_s", blob[tag]["decode_tok_s"]),
                  (cfg_name, "cache_bytes_per_value",
-                  blob[layout]["cache_bytes_per_value"]),
+                  blob[tag]["cache_bytes_per_value"]),
                  (cfg_name, "cache_total_bytes",
-                  round(blob[layout]["cache_total_bytes"], 0))]
+                  round(blob[tag]["cache_total_bytes"], 0))]
     with open(out_json, "w") as f:
         json.dump(blob, f, indent=2, sort_keys=True)
     print(f"# wrote {out_json}", file=sys.stderr)
@@ -48,6 +57,10 @@ def decode_cache_rows(out_json: str = "BENCH_decode.json") -> list:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables", default="1,2,3,4,5,6,stats,serve,decode_cache")
+    ap.add_argument("--decode-impls", default="reference,pallas",
+                    help="fused-decode impls to sweep in decode_cache "
+                         "(pallas runs in interpret mode off-TPU: exact "
+                         "but slow — CI restricts to reference)")
     args = ap.parse_args()
     want = set(args.tables.split(","))
 
@@ -90,7 +103,8 @@ def main() -> None:
                  round(stats["prefill_s"] * 1e6, 0))])
     if "decode_cache" in want:
         # KV-cache layout sweep (fp32 / bf16 / sparq) -> BENCH_decode.json
-        common.emit("decode_cache", decode_cache_rows())
+        common.emit("decode_cache", decode_cache_rows(
+            impls=tuple(args.decode_impls.split(","))))
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

@@ -1,11 +1,17 @@
 """Pallas TPU kernels for SPARQ's compute hot-spot (the quantized matmul)
-and the §5.1 packed KV-cache storage path (quantize + meta-decode)."""
-from repro.kernels.ops import (bytes_per_value, quantized_matmul,
-                               sparq_dequantize, sparq_pack, sparq_quantize)
+and the §5.1 packed KV-cache storage path (quantize + meta-decode + fused
+packed-cache decode attention)."""
+from repro.kernels.ops import (bytes_per_value, ctrl_bytes_per_value,
+                               data_bytes_per_value, quantized_matmul,
+                               sparq_decode_attention, sparq_dequantize,
+                               sparq_pack, sparq_quantize)
+from repro.kernels.sparq_decode_attn import sparq_decode_attn_pallas
 from repro.kernels.sparq_dequant import sparq_dequant_pallas
 from repro.kernels.sparq_matmul import sparq_matmul_pallas
 from repro.kernels.sparq_quant import sparq_quant_pallas
 
 __all__ = ["quantized_matmul", "sparq_quantize", "sparq_dequantize",
-           "sparq_pack", "bytes_per_value", "sparq_matmul_pallas",
-           "sparq_quant_pallas", "sparq_dequant_pallas"]
+           "sparq_pack", "sparq_decode_attention", "bytes_per_value",
+           "data_bytes_per_value", "ctrl_bytes_per_value",
+           "sparq_matmul_pallas", "sparq_quant_pallas",
+           "sparq_dequant_pallas", "sparq_decode_attn_pallas"]

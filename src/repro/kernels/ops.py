@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core.quantizer import QScale
 from repro.core.sparq import SparqConfig
 from repro.kernels import ref as _ref
+from repro.kernels.sparq_decode_attn import sparq_decode_attn_pallas
 from repro.kernels.sparq_dequant import sparq_dequant_pallas
 from repro.kernels.sparq_matmul import sparq_matmul_pallas
 from repro.kernels.sparq_quant import sparq_quant_pallas
@@ -28,22 +29,42 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+def _pad_to(x: jnp.ndarray, mult: int, axis: int,
+            value: float = 0) -> jnp.ndarray:
     size = x.shape[axis]
     pad = (-size) % mult
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ----------------------------------------------------------------------
+# §5.1 footprint accounting — the single source of truth. models/cache.py
+# delegates here, so the roofline (combined figure) and the cache reports
+# (data plane vs ShiftCtrl side-band) can never drift apart.
+# ----------------------------------------------------------------------
+
+def data_bytes_per_value(cfg: SparqConfig) -> float:
+    """Data-plane HBM residency: n data bits per value + 1 MuxCtrl bit per
+    vSPARQ pair. Plain int8 (trimming disabled) is one full byte."""
+    if not cfg.enabled:
+        return 1.0
+    mux = 0.5 if cfg.vsparq else 0.0
+    return (cfg.bits + mux) / 8.0
+
+
+def ctrl_bytes_per_value(cfg: SparqConfig) -> float:
+    """ShiftCtrl side-band residency: 3 bits per value when trimming."""
+    return 3.0 / 8.0 if cfg.enabled else 0.0
 
 
 def bytes_per_value(cfg: SparqConfig) -> float:
-    """HBM residency of the packed SPARQ format (paper §5.1): n data bits +
-    3-bit ShiftCtrl per value + 1 MuxCtrl per pair. Used by the roofline."""
-    if not cfg.enabled:
-        return 1.0  # plain int8
-    return (cfg.bits + 3 + 0.5) / 8.0
+    """Combined HBM residency of the packed SPARQ format (paper §5.1):
+    n data bits + 3-bit ShiftCtrl per value + 1 MuxCtrl bit per vSPARQ
+    pair (charged only when vSPARQ is on). Used by the roofline."""
+    return data_bytes_per_value(cfg) + ctrl_bytes_per_value(cfg)
 
 
 def quantized_matmul(
@@ -146,3 +167,54 @@ def sparq_dequantize(
             _pad_to(s2, bm, 0), _pad_to(m2, bm, 0),
             bm=bm, interpret=not _on_tpu())[:M]
     return codes.reshape(*lead, K)
+
+
+def sparq_decode_attention(
+    q: jnp.ndarray,           # (B, 1, H, hd) float query, one decode token
+    k_data: jnp.ndarray,      # (B, Tk, KV, hd) int8 window codes
+    k_meta: jnp.ndarray,      # (B, Tk, KV, hd) int8 packed meta bytes
+    k_scale: jnp.ndarray,     # scalar f32 per-site scale
+    v_data: jnp.ndarray,
+    v_meta: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    kpos: jnp.ndarray,        # (B, Tk) int32 slot positions (-1 = empty)
+    cur: jnp.ndarray,         # scalar int32: position of the decoded token
+    window: int = 0,
+    impl: str = "auto",
+    bk: int = 128,
+) -> jnp.ndarray:
+    """Fused flash-decode attention over the raw packed SPARQ cache planes
+    (§5.1 meta-decode inside the Tk-tile loop; no full-plane dequantize).
+
+    Serves both the linear cache (kpos = arange, masked by kpos <= cur) and
+    the sliding-window ring cache (kpos = slot_pos + static `window`).
+    Returns f32 (B, 1, H, hd)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    B, Tq, H, hd = q.shape
+    assert Tq == 1, f"decode attention takes one query token, got Tq={Tq}"
+    Tk, KV = k_data.shape[1], k_data.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    bk = min(bk, Tk)
+    # pad Tk to a tile multiple in the packed domain (int8 planes + the
+    # kpos vector, padded with -1 so padding is masked out) — still ~7x
+    # cheaper than padding a dequantized fp32 plane would be
+    kd = _pad_to(k_data, bk, 1)
+    km = _pad_to(k_meta, bk, 1)
+    vd = _pad_to(v_data, bk, 1)
+    vm = _pad_to(v_meta, bk, 1)
+    kp = _pad_to(kpos.astype(jnp.int32), bk, 1, value=-1)
+    cur = jnp.asarray(cur, jnp.int32)
+    ks = jnp.asarray(k_scale, jnp.float32)
+    vs = jnp.asarray(v_scale, jnp.float32)
+    if impl == "reference":
+        out = _ref.ref_sparq_decode_attn(
+            qg, kd, km, ks, vd, vm, vs, kp, cur, window=window, bk=bk)
+    elif impl == "pallas":
+        out = sparq_decode_attn_pallas(
+            qg, kd, km, ks, vd, vm, vs, kp, cur, window=window, bk=bk,
+            interpret=not _on_tpu())
+    else:
+        raise ValueError(impl)
+    return out.reshape(B, 1, H, hd)

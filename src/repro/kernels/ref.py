@@ -90,3 +90,62 @@ def ref_sparq_dequant(store: jnp.ndarray, meta: jnp.ndarray) -> jnp.ndarray:
     q = store.astype(jnp.int32)
     shift = meta_shifts(meta)
     return (jnp.sign(q) * jnp.left_shift(jnp.abs(q), shift)).astype(jnp.int8)
+
+
+def ref_sparq_decode_attn(q, k_data, k_meta, k_scale, v_data, v_meta,
+                          v_scale, kpos, cur, *, window: int = 0,
+                          bk: int = 128):
+    """Tiled oracle for sparq_decode_attn_pallas: same Tk-tile loop, same
+    per-tile meta-decode + online-softmax update order, expressed in jnp
+    with a lax.scan over tiles — so it never materializes the dequantized
+    K/V planes either, and (running the identical op sequence) matches the
+    interpret-mode kernel bit for bit.
+
+    q [B,KV,G,hd] float; k/v planes [B,Tk,KV,hd] int8; kpos [B,Tk] int32
+    slot positions (-1 = empty); cur scalar int32. Returns f32 [B,KV,G,hd].
+    """
+    B, KV, G, hd = q.shape
+    Tk = k_data.shape[1]
+    assert Tk % bk == 0, (Tk, bk)
+    qf = q.astype(jnp.float32)
+    sm_scale = hd ** -0.5
+
+    def _decode(store, meta, scale):
+        # meta-decode in int32 without the int8 narrowing of
+        # ref_sparq_dequant — identical to the kernel's datapath
+        q32 = store.astype(jnp.int32)
+        shift = meta_shifts(meta)
+        recon = jnp.sign(q32) * jnp.left_shift(jnp.abs(q32), shift)
+        return recon.astype(jnp.float32) * scale
+
+    def tile(carry, t):
+        m, l, acc = carry
+        kd = jax.lax.dynamic_slice_in_dim(k_data, t * bk, bk, 1)
+        km = jax.lax.dynamic_slice_in_dim(k_meta, t * bk, bk, 1)
+        vd = jax.lax.dynamic_slice_in_dim(v_data, t * bk, bk, 1)
+        vm = jax.lax.dynamic_slice_in_dim(v_meta, t * bk, bk, 1)
+        kp = jax.lax.dynamic_slice_in_dim(kpos, t * bk, bk, 1)  # [B, bk]
+        k = _decode(kd, km, k_scale)                   # [B, bk, KV, hd]
+        s = jnp.einsum("bkgh,bskh->bkgs", qf, k,
+                       preferred_element_type=jnp.float32) * sm_scale
+        ok = (kp >= 0) & (kp <= cur)
+        if window:
+            ok &= kp > cur - window
+        okb = ok[:, None, None, :]                     # [B, 1, 1, bk]
+        s = jnp.where(okb, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(okb, p, 0.0)
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        v = _decode(vd, vm, v_scale)
+        pv = jnp.einsum("bkgs,bskh->bkgh", p, v,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr + pv), None
+
+    m0 = jnp.full((B, KV, G, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, 1), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(tile, (m0, l0, a0), jnp.arange(Tk // bk))
+    return acc / jnp.maximum(l, 1e-30)

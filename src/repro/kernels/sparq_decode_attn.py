@@ -1,0 +1,148 @@
+"""Fused flash-decode attention over the packed SPARQ KV cache.
+
+This is the kernel the §5.1 footprint argument needs to be *true*: the
+decode hot path streams the cache's raw storage — int8 window codes plus
+the packed per-pair meta byte [mux(1) | shift_hi(3) | shift_lo(3)] — from
+HBM and performs the meta-decode (|code| << ShiftCtrl, sign reapplied;
+mux'd vSPARQ lanes pass through at shift 0) *inside* the Tk-tile loop,
+fused with the online-softmax QK/PV accumulation. The fp32 K/V planes are
+never materialized: each tile is decoded in VMEM, contracted, and dropped.
+`CachedTensor.read()` (the full-plane dequantize) remains only as the
+prefill/debug fallback.
+
+Shapes and grid:
+  q        [B, KV, G, hd]   one query token, GQA via head grouping
+  k/v data [B, Tk, KV, hd]  int8 window codes (§5.1 data plane)
+  k/v meta [B, Tk, KV, hd]  int8 packed ShiftCtrl/MuxCtrl bytes
+  kpos     [B, Tk]          absolute position per cache slot (-1 = empty)
+  cur      scalar int32     position of the token being decoded
+
+grid = (B, KV, Tk/bk); the Tk axis is sequential ("arbitrary") and carries
+flash statistics (m, l, acc) in VMEM scratch; B and KV are parallel. The
+same kernel serves the linear cache (kpos = arange, masked by kpos <= cur)
+and the sliding-window ring cache (kpos = slot_pos, plus the static
+`window` bound) — masking is pure position arithmetic, so ring slot order
+never needs unrotating.
+
+The lane (last) axis is hd — the vSPARQ pairing axis of the cache planes —
+so ShiftCtrl extraction is a parity select on the lane index, exactly as in
+`sparq_dequant._kernel`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._compat import MemorySpace as _MemorySpace
+from repro.kernels.ref import meta_shifts
+
+
+def _meta_decode_f32(store, meta, scale):
+    """int8 (codes, meta) tile -> f32 values tile (lane axis = pair axis).
+    Pure jnp (meta_shifts is shared with the ref oracle and sparq_pack),
+    so it traces inside the Pallas kernel body unchanged."""
+    q = store.astype(jnp.int32)
+    recon = jnp.sign(q) * jnp.left_shift(jnp.abs(q), meta_shifts(meta))
+    return recon.astype(jnp.float32) * scale
+
+
+def _kernel(q_ref, kd_ref, km_ref, vd_ref, vm_ref, kpos_ref, cur_ref,
+            kscale_ref, vscale_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            window: int, sm_scale: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [G, hd]
+    k = _meta_decode_f32(kd_ref[0, :, 0], km_ref[0, :, 0],
+                         kscale_ref[0, 0])                 # [bk, hd]
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale     # [G, bk]
+
+    kpos = kpos_ref[...]                                   # [1, bk]
+    cur = cur_ref[0, 0]
+    ok = (kpos >= 0) & (kpos <= cur)
+    if window:
+        ok &= kpos > cur - window
+    s = jnp.where(ok, s, -jnp.inf)
+
+    m_prev = m_ref[...]                                    # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+    l_new = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+
+    v = _meta_decode_f32(vd_ref[0, :, 0], vm_ref[0, :, 0],
+                         vscale_ref[0, 0])                 # [bk, hd]
+    pv = jax.lax.dot_general(
+        p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # [G, hd]
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "bk", "interpret"))
+def sparq_decode_attn_pallas(
+    q: jnp.ndarray,           # (B, KV, G, hd) float
+    k_data: jnp.ndarray,      # (B, Tk, KV, hd) int8 window codes
+    k_meta: jnp.ndarray,      # (B, Tk, KV, hd) int8 packed meta bytes
+    k_scale: jnp.ndarray,     # scalar f32 per-site scale
+    v_data: jnp.ndarray,
+    v_meta: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    kpos: jnp.ndarray,        # (B, Tk) int32 slot positions (-1 empty)
+    cur: jnp.ndarray,         # scalar int32 query-token position
+    *,
+    window: int = 0,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns f32 (B, KV, G, hd) attention output."""
+    B, KV, G, hd = q.shape
+    Tk = k_data.shape[1]
+    assert k_data.shape == (B, Tk, KV, hd), (q.shape, k_data.shape)
+    assert Tk % bk == 0 and hd % 2 == 0, (Tk, bk, hd)
+    kernel = functools.partial(_kernel, window=window,
+                               sm_scale=hd ** -0.5)
+    plane = pl.BlockSpec((1, bk, 1, hd), lambda b, kv, t: (b, t, kv, 0))
+    smem = pl.BlockSpec((1, 1), lambda b, kv, t: (0, 0),
+                        memory_space=_MemorySpace.SMEM)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, Tk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kv, t: (b, kv, 0, 0)),
+            plane, plane, plane, plane,
+            pl.BlockSpec((1, bk), lambda b, kv, t: (b, t)),
+            smem, smem, smem,
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, kv, t: (b, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # m: running max
+            pltpu.VMEM((G, 1), jnp.float32),    # l: running denominator
+            pltpu.VMEM((G, hd), jnp.float32),   # acc: running numerator
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k_data, k_meta, v_data, v_meta, kpos,
+      cur.reshape(1, 1), k_scale.reshape(1, 1), v_scale.reshape(1, 1))

@@ -4,10 +4,13 @@ quantization at both matmuls (the paper's compute path) and the KV cache
 
 The decode loop is a `DecodeEngine`: generation runs as a single traced
 `jax.lax.scan` inside one jitted program — no per-step Python dispatch —
-so tok/s measures the model, not the host loop. The cache layout is
-selected with `--kv-cache {fp32,bf16,sparq}`; `--impl` picks the kernel
-implementation (reference int-dot / Pallas / auto) for both the quantized
-matmuls and the cache codec.
+so tok/s measures the model, not the host loop. With the sparq layout the
+decode step consumes the packed cache directly through the fused
+flash-decode kernel (kernels.sparq_decode_attn); the full fp K/V planes
+are never materialized. The cache layout is selected with
+`--kv-cache {fp32,bf16,sparq}`; `--impl` picks the kernel implementation
+(reference / Pallas / auto) for the quantized matmuls, the cache codec,
+and the fused decode-attention kernel.
 
 Local demo:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
@@ -62,8 +65,10 @@ def make_cache_config(layout: str, sparq: Optional[SparqConfig],
 class DecodeEngine:
     """Greedy batched generation as one traced program per phase:
     a jitted prefill and a jitted `lax.scan` over decode steps (the scan
-    carries (token, caches, pos); caches quantize/dequantize inside the
-    traced step when the sparq layout is active)."""
+    carries (token, caches, pos)). With the sparq layout the traced step
+    quantizes on write and attends through the fused packed-cache decode
+    kernel on read — the packed planes are streamed directly; no full-plane
+    dequantize inside the decode loop."""
 
     def __init__(self, model: Model, cache_cfg: Optional[CacheConfig] = None,
                  ctx: Optional[QuantCtx] = None, scales_groups=None):
@@ -100,13 +105,43 @@ class DecodeEngine:
         return self.model.init_cache(batch, max_len,
                                      cache_cfg=self.cache_cfg)
 
-    def generate(self, params, batch, gen: int, pad: int = 8):
-        """Returns (tokens [B, gen], stats). Prompt + generation must fit
-        in prompt_len + gen + pad cache slots."""
+    def generate(self, params, batch, gen: int, pad: int = 8,
+                 max_len: Optional[int] = None, warmup: bool = True):
+        """Returns (tokens [B, gen], stats).
+
+        `max_len` caps the cache capacity (default: prompt + gen + pad
+        slots). The capacity check runs host-side *before* tracing: the
+        traced write path (`dynamic_update_slice_in_dim`) silently clamps
+        its start index, so an overflowing decode would quietly overwrite
+        the newest cache slots instead of erroring.
+
+        `warmup` runs prefill + decode once untimed first, so prefill_s /
+        decode_tok_s measure steady-state execution rather than XLA
+        compilation; the first (compiling) pass is reported as compile_s.
+        """
         B, prompt_len = batch["tokens"].shape
         pos0 = prompt_len + (self.model.cfg.frontend_len
                              if self.model.cfg.family == "vlm" else 0)
-        caches = self.init_cache(B, pos0 + gen + pad)
+        max_len = max_len if max_len is not None else pos0 + gen + pad
+        if pos0 + gen > max_len:
+            raise ValueError(
+                f"KV-cache overflow: prompt ({pos0} slots) + generation "
+                f"({gen}) needs {pos0 + gen} cache slots but capacity is "
+                f"{max_len}; the traced write path would silently clamp "
+                f"and overwrite the newest entries")
+        caches = self.init_cache(B, max_len)
+
+        compile_s = 0.0
+        if warmup:
+            t0 = time.time()
+            tok_w, caches_w = self._prefill(params, batch, caches)
+            if gen > 1:
+                rest_w, _ = self._decode(params, tok_w, caches_w, pos0,
+                                         steps=gen - 1)
+                jax.block_until_ready(rest_w)
+            else:
+                jax.block_until_ready(tok_w)
+            compile_s = time.time() - t0
 
         t0 = time.time()
         tok0, caches = self._prefill(params, batch, caches)
@@ -127,6 +162,7 @@ class DecodeEngine:
         stats = {
             "prefill_s": t_prefill,
             "decode_s": t_decode,
+            "compile_s": compile_s,
             "decode_tok_s": (B * (gen - 1) / max(t_decode, 1e-9))
                             if gen > 1 else 0.0,
             "cache_bytes_per_value":
@@ -141,10 +177,10 @@ class DecodeEngine:
 
 def serve(model: Model, params, batch, gen: int,
           ctx: QuantCtx | None, scales_groups=None,
-          cache_cfg: Optional[CacheConfig] = None):
+          cache_cfg: Optional[CacheConfig] = None, warmup: bool = True):
     """Greedy batched generation. Returns (tokens [B, gen], stats)."""
     engine = DecodeEngine(model, cache_cfg, ctx, scales_groups)
-    return engine.generate(params, batch, gen)
+    return engine.generate(params, batch, gen, warmup=warmup)
 
 
 def main(argv=None):
@@ -164,6 +200,9 @@ def main(argv=None):
                     help="calibration batches (0 = dynamic scales)")
     ap.add_argument("--prequantize", action="store_true",
                     help="deploy int8 weight codes (offline quantization)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the untimed warmup pass (timings then "
+                         "include XLA compilation)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -191,11 +230,12 @@ def main(argv=None):
 
     cache_cfg = make_cache_config(args.kv_cache, scfg, args.impl)
     toks, stats = serve(model, params, batch, args.gen, ctx, scales,
-                        cache_cfg)
+                        cache_cfg, warmup=not args.no_warmup)
     print(f"arch={cfg.name} sparq={args.sparq} kv-cache={args.kv_cache} "
           f"impl={args.impl} batch={args.batch} "
           f"prompt={args.prompt_len} gen={args.gen}")
-    print(f"prefill {stats['prefill_s']*1e3:.0f} ms | decode "
+    print(f"compile {stats['compile_s']:.1f} s | "
+          f"prefill {stats['prefill_s']*1e3:.0f} ms | decode "
           f"{stats['decode_tok_s']:.1f} tok/s | cache "
           f"{stats['cache_bytes_per_value']:.4f} B/value data "
           f"(+{stats['cache_ctrl_bytes_per_value']:.4f} ctrl), "

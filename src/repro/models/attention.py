@@ -157,9 +157,31 @@ def local_attention(q, k, v, *, window: int, q_offset=0):
 
 
 def decode_attention(q, cache: CacheStore, *, window: int = 0):
-    """Single-token decode against a cache. q [B,1,H,hd]. The cache planes
-    are read through CachedTensor.read() — for the sparq layout that is the
-    §5.1 meta-decode (codes << ShiftCtrl) plus the per-site scale."""
+    """Single-token decode against a cache. q [B,1,H,hd].
+
+    sparq layout: the raw packed planes (int8 window codes + meta bytes +
+    per-site scale) go straight to the fused flash-decode kernel
+    (kernels.ops.sparq_decode_attention) — the §5.1 meta-decode happens
+    inside the Tk-tile loop and the fp K/V planes are never materialized.
+    fp layout: the dequantize-then-attend fallback below."""
+    if cache.k.is_sparq:
+        from repro.kernels.ops import sparq_decode_attention
+        B, Tk = cache.k.data.shape[:2]
+        kpos = jnp.broadcast_to(jnp.arange(Tk, dtype=jnp.int32)[None],
+                                (B, Tk))
+        out = sparq_decode_attention(
+            q, cache.k.data, cache.k.meta, cache.k.scale,
+            cache.v.data, cache.v.meta, cache.v.scale,
+            kpos, cache.pos - 1, window=window, impl=cache.k.impl)
+        return out.astype(q.dtype)
+    return decode_attention_dequant(q, cache, window=window)
+
+
+def decode_attention_dequant(q, cache: CacheStore, *, window: int = 0):
+    """Full-plane fallback: CachedTensor.read() then attend. For the sparq
+    layout this dequantizes the whole [B,Tmax,KV,hd] cache each step — keep
+    it off the decode hot path (it is the oracle the fused kernel is tested
+    against, and the path for fp planes / cross-attention K/V)."""
     B, _, H, hd = q.shape
     k, v = cache.kv()
     KV = k.shape[2]

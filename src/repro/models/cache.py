@@ -22,6 +22,15 @@ pytrees: layout/codec/impl are static metadata, arrays are leaves, so the
 existing stacked-layer `lax.scan` machinery in `transformer.stack_apply`
 carries them unchanged.
 
+Decode read path: the sparq layout is consumed *without* dequantizing the
+full plane. `attention.decode_attention`, `transformer.ring_decode_attention`
+and the MLA decode hand the raw (data, meta, scale) planes to
+`kernels.ops.sparq_decode_attention` (or a tiled equivalent), which performs
+the §5.1 meta-decode tile-by-tile inside the fused attention loop — the
+bytes the decode step streams from HBM are the packed ones.
+`CachedTensor.read()` still materializes the dequantized plane, but only as
+the prefill/debug fallback (cross-attention K/V, tests, inspection).
+
 Footprint accounting splits the §5.1 format into two planes:
   data plane — n data bits per value + 1 MuxCtrl bit per vSPARQ pair
                (`bytes_per_value`, the headline cache-residency figure:
@@ -29,8 +38,9 @@ Footprint accounting splits the §5.1 format into two planes:
   ctrl plane — the 3-bit ShiftCtrl per value (`ctrl_bytes_per_value`,
                0.375 B/value), reported separately because on hardware it
                streams with the (much smaller) metadata side-band.
-The roofline model in `kernels.ops.bytes_per_value` reports the combined
-figure for the matmul path.
+Both figures delegate to `kernels.ops` (`data_bytes_per_value` /
+`ctrl_bytes_per_value`), whose sum is the roofline's combined
+`kernels.ops.bytes_per_value` — one source of truth, enforced by test.
 """
 from __future__ import annotations
 
@@ -79,21 +89,20 @@ class CacheConfig:
 
 
 def bytes_per_value(cc: CacheConfig) -> float:
-    """Modeled HBM residency of the cache *data plane*, bytes per value."""
+    """Modeled HBM residency of the cache *data plane*, bytes per value.
+    Delegates to kernels.ops so cache reports and the roofline agree."""
     if cc.layout == "fp":
         return float(jnp.dtype(cc.dtype).itemsize)
-    s = cc.sparq
-    if not s.enabled:
-        return 1.0                          # plain int8
-    mux = 0.5 if s.vsparq else 0.0          # 1 MuxCtrl bit per pair
-    return (s.bits + mux) / 8.0
+    from repro.kernels.ops import data_bytes_per_value
+    return data_bytes_per_value(cc.sparq)
 
 
 def ctrl_bytes_per_value(cc: CacheConfig) -> float:
     """Modeled ShiftCtrl side-band residency, bytes per value."""
-    if cc.layout == "fp" or not cc.sparq.enabled:
+    if cc.layout == "fp":
         return 0.0
-    return 3.0 / 8.0
+    from repro.kernels.ops import ctrl_bytes_per_value as _ops_ctrl
+    return _ops_ctrl(cc.sparq)
 
 
 # ----------------------------------------------------------------------
@@ -185,9 +194,20 @@ class CachedTensor:
         meta = self.meta.at[:, slots].set(meta)
         return dataclasses.replace(self, data=data, meta=meta, scale=scale)
 
+    @property
+    def is_sparq(self) -> bool:
+        return self.layout == "sparq"
+
     # -------------------------------------------------------------- read
     def read(self, dtype=None) -> jnp.ndarray:
-        """Dequantized full plane (decode-time attention consumes this)."""
+        """Dequantized full plane — the prefill/debug fallback ONLY.
+
+        The decode hot path must NOT call this for the sparq layout: the
+        fused kernels (kernels.ops.sparq_decode_attention, the tiled MLA
+        decode) consume the raw (data, meta, scale) planes directly, so the
+        packed bytes are what actually stream from HBM. A full-plane read
+        on every decode step would re-expand the cache to fp32 and forfeit
+        the §5.1 memory-bound win (enforced by a spy test in test_cache)."""
         if self.layout == "fp":
             return self.data if dtype is None else self.data.astype(dtype)
         from repro.kernels.ops import sparq_dequantize

@@ -47,6 +47,73 @@ def _rms(x, scale, eps):
     return (xf * (1.0 + scale)).astype(x.dtype)
 
 
+def _sparq_mla_decode(q_lat: jnp.ndarray, q_pe: jnp.ndarray,
+                      cache: MLACache, *, sm_scale: float, out_dtype,
+                      bk: int = 128) -> jnp.ndarray:
+    """Fused absorbed-MLA decode over the packed latent planes.
+
+    Scores couple two quantized planes (s = q_lat·c_kv + q_pe·k_pe, each
+    with its own per-site scale), so this uses a tiled lax.scan rather than
+    the shared GQA kernel: each Tk tile is meta-decoded (via
+    ops.sparq_dequantize — reference or Pallas per the plane's impl) and
+    folded into an online-softmax accumulation in latent space. The full fp
+    latent plane is never materialized. Returns o_lat [B, 1, H, r]."""
+    from repro.kernels.ops import sparq_dequantize
+    B, _, H, r = q_lat.shape
+    Tk = cache.c_kv.data.shape[1]
+    bk = min(bk, Tk)
+
+    def pad_t(x):       # pad the time axis to a tile multiple (packed int8)
+        return jnp.pad(x, ((0, 0), (0, (-Tk) % bk), (0, 0)))
+
+    c_data = pad_t(cache.c_kv.data)
+    c_meta = pad_t(cache.c_kv.meta)
+    p_data = pad_t(cache.k_pe.data)
+    p_meta = pad_t(cache.k_pe.meta)
+    # padded slots have kpos >= Tk >= cache.pos, so kpos < pos masks them
+    kpos_all = jnp.arange(c_data.shape[1], dtype=jnp.int32)
+    ql = q_lat[:, 0].astype(jnp.float32)                   # [B, H, r]
+    qp = q_pe[:, 0].astype(jnp.float32)                    # [B, H, dr]
+    impl = cache.c_kv.impl
+    c_scale = cache.c_kv.scale
+    pe_scale = cache.k_pe.scale
+
+    def tile(carry, t):
+        m, l, acc = carry
+        cs = jax.lax.dynamic_slice_in_dim(c_data, t * bk, bk, 1)
+        cm = jax.lax.dynamic_slice_in_dim(c_meta, t * bk, bk, 1)
+        ps = jax.lax.dynamic_slice_in_dim(p_data, t * bk, bk, 1)
+        pm = jax.lax.dynamic_slice_in_dim(p_meta, t * bk, bk, 1)
+        kp = jax.lax.dynamic_slice_in_dim(kpos_all, t * bk, bk)
+        c_f = sparq_dequantize(cs, cm, impl=impl).astype(jnp.float32) \
+            * c_scale                                      # [B, bk, r]
+        pe_f = sparq_dequantize(ps, pm, impl=impl).astype(jnp.float32) \
+            * pe_scale                                     # [B, bk, dr]
+        s = (jnp.einsum("bhr,bsr->bhs", ql, c_f,
+                        preferred_element_type=jnp.float32) +
+             jnp.einsum("bhe,bse->bhs", qp, pe_f,
+                        preferred_element_type=jnp.float32)) * sm_scale
+        ok = (kp < cache.pos)[None, None, :]               # [1, 1, bk]
+        s = jnp.where(ok, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(ok, p, 0.0)
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bhs,bsr->bhr", p, c_f,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr + pv), None
+
+    m0 = jnp.full((B, H, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, 1), jnp.float32)
+    a0 = jnp.zeros((B, H, r), jnp.float32)
+    nT = c_data.shape[1] // bk
+    (m, l, acc), _ = jax.lax.scan(tile, (m0, l0, a0), jnp.arange(nT))
+    o_lat = acc / jnp.maximum(l, 1e-30)
+    return o_lat[:, None].astype(out_dtype)                # [B, 1, H, r]
+
+
 def mla_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
               positions: jnp.ndarray,
               cache: Optional[MLACache] = None,
@@ -73,20 +140,27 @@ def mla_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
                              cache.pos + T)
 
     if mode == "decode":
-        # absorbed form: attend in latent space (cache planes dequantized
-        # on read — the sparq layout's meta-decode + per-site scale)
-        c_full = new_cache.c_kv.read(x.dtype)
-        pe_full = new_cache.k_pe.read(x.dtype)
+        # absorbed form: attend in latent space. sparq layout: tiled fused
+        # decode over the raw packed planes (per-tile §5.1 meta-decode, no
+        # full-plane read); fp layout: plane read + plain softmax.
         wuk = as_weight(params["w_uk"], x.dtype).reshape(r, H, dn)
         q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, wuk)
-        s = (jnp.einsum("bthr,bsr->bhts", q_lat, c_full) +
-             jnp.einsum("bthe,bse->bhts", q_pe, pe_full))
-        s = s.astype(jnp.float32) * (dn + dr) ** -0.5
-        kpos = jnp.arange(c_full.shape[1])
-        s = jnp.where((kpos < new_cache.pos)[None, None, None], s, -jnp.inf)
-        p = jax.nn.softmax(s, axis=-1)
-        o_lat = jnp.einsum("bhts,bsr->bthr", p.astype(x.dtype),
-                           c_full.astype(x.dtype))
+        if new_cache.c_kv.is_sparq:
+            o_lat = _sparq_mla_decode(q_lat, q_pe, new_cache,
+                                      sm_scale=(dn + dr) ** -0.5,
+                                      out_dtype=x.dtype)
+        else:
+            c_full = new_cache.c_kv.read(x.dtype)
+            pe_full = new_cache.k_pe.read(x.dtype)
+            s = (jnp.einsum("bthr,bsr->bhts", q_lat, c_full) +
+                 jnp.einsum("bthe,bse->bhts", q_pe, pe_full))
+            s = s.astype(jnp.float32) * (dn + dr) ** -0.5
+            kpos = jnp.arange(c_full.shape[1])
+            s = jnp.where((kpos < new_cache.pos)[None, None, None],
+                          s, -jnp.inf)
+            p = jax.nn.softmax(s, axis=-1)
+            o_lat = jnp.einsum("bhts,bsr->bthr", p.astype(x.dtype),
+                               c_full.astype(x.dtype))
         wuv = as_weight(params["w_uv"], x.dtype).reshape(r, H, dv)
         out = jnp.einsum("bthr,rhv->bthv", o_lat, wuv)
     else:

@@ -59,7 +59,19 @@ def ring_insert(cache: RingKVCache, k_new, v_new) -> RingKVCache:
 
 
 def ring_decode_attention(q, cache: RingKVCache, window: int):
-    """q [B,1,H,hd] against the ring. Mask by per-slot absolute position."""
+    """q [B,1,H,hd] against the ring. Mask by per-slot absolute position.
+
+    sparq layout: the raw packed planes go to the fused flash-decode kernel
+    (windowed variant — slot_pos doubles as the kernel's kpos input, so the
+    ring's rotation never needs undoing); fp layout: full-plane read."""
+    if cache.k.is_sparq:
+        from repro.kernels.ops import sparq_decode_attention
+        out = sparq_decode_attention(
+            q, cache.k.data, cache.k.meta, cache.k.scale,
+            cache.v.data, cache.v.meta, cache.v.scale,
+            cache.slot_pos, cache.pos - 1, window=window,
+            impl=cache.k.impl)
+        return out.astype(q.dtype)
     B, _, H, hd = q.shape
     k, v = cache.k.read(), cache.v.read()
     KV = k.shape[2]

@@ -5,6 +5,8 @@ ring-slot writes, modeled footprint accounting (§5.1 packed format), and
 the end-to-end acceptance: the scan-based DecodeEngine produces identical
 greedy tokens for the fp and sparq(int8, trimming disabled) layouts, and
 matching tokens across engine phases."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -147,7 +149,7 @@ def tiny_lm():
 def _engine_tokens(model, params, batch, cache_cfg, gen=12):
     from repro.launch.serve import DecodeEngine
     engine = DecodeEngine(model, cache_cfg)
-    toks, stats = engine.generate(params, batch, gen)
+    toks, stats = engine.generate(params, batch, gen, warmup=False)
     return np.asarray(toks), stats
 
 
@@ -226,3 +228,153 @@ def test_serve_cli_sparq_cache():
                     "--calibrate", "1"])
     assert stats["decode_tok_s"] > 0
     assert stats["cache_bytes_per_value"] <= 0.57
+    assert stats["compile_s"] > 0       # warmup pass reported separately
+
+
+# ----------------------------------------------------------------------
+# fused packed-cache decode path (no full-plane read on the hot path)
+# ----------------------------------------------------------------------
+
+def test_sparq_decode_never_reads_full_plane(tiny_lm, monkeypatch):
+    """Acceptance: a decode step with the sparq layout must not call
+    CachedTensor.read() (the full-plane dequantize) — the fused kernel
+    consumes the raw packed planes. read() stays legal for fp planes and
+    for prefill/debug."""
+    model, params, batch = tiny_lm
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True))
+    caches = model.init_cache(2, 40, cache_cfg=cc)
+    logits, caches = model.prefill(params, batch, caches)
+    tok = jnp.argmax(logits, -1)[:, None]
+
+    read_layouts = []
+    orig_read = CachedTensor.read
+
+    def spy(self, dtype=None):
+        read_layouts.append(self.layout)
+        return orig_read(self, dtype)
+
+    monkeypatch.setattr(CachedTensor, "read", spy)
+    model.decode_step(params, tok, caches, jnp.asarray(24, jnp.int32))
+    assert "sparq" not in read_layouts, \
+        f"decode step dequantized a full sparq plane: {read_layouts}"
+
+
+def test_fused_decode_matches_dequant_path_greedy(tiny_lm, monkeypatch):
+    """Acceptance: the fused decode path produces exactly the PR 1
+    dequantize-path greedy tokens (int8 grid: bit-identical storage; 5opt:
+    identical codes, attention differs only in f32 summation order)."""
+    from repro.models import attention as attn_mod
+    model, params, batch = tiny_lm
+    for codec in (SparqConfig(enabled=False, signed=True),
+                  SparqConfig.opt5(signed=True)):
+        cc = CacheConfig.sparq_cache(codec)
+        t_fused, _ = _engine_tokens(model, params, batch, cc, gen=8)
+        with monkeypatch.context() as mp:
+            mp.setattr(attn_mod, "decode_attention",
+                       attn_mod.decode_attention_dequant)
+            t_dequant, _ = _engine_tokens(model, params, batch, cc, gen=8)
+        np.testing.assert_array_equal(t_fused, t_dequant)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b",
+                                  "recurrentgemma-9b"])
+def test_fused_decode_nondense_archs_match_fp(arch):
+    """The two non-dense fused read paths — absorbed-MLA tiled decode
+    (deepseek latent cache) and the windowed ring kernel (recurrentgemma
+    hybrid) — reproduce the fp-cache greedy tokens exactly on the lossless
+    int8 grid, end to end through the DecodeEngine."""
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import Model
+    cfg = get_reduced_config(arch).replace(
+        dtype=jnp.float32, remat=False, capacity_factor=1000.0)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (2, 16),
+                                          0, cfg.vocab_size)}
+    t_fp, _ = _engine_tokens(model, params, batch, CacheConfig.fp32(),
+                             gen=6)
+    cc = CacheConfig.sparq_cache(SparqConfig(enabled=False, signed=True),
+                                 impl="reference")
+    t_i8, _ = _engine_tokens(model, params, batch, cc, gen=6)
+    np.testing.assert_array_equal(t_fp, t_i8)
+
+
+def test_mla_sparq_decode_matches_dequant_oracle():
+    """Bit-level check of _sparq_mla_decode: the tiled fused latent decode
+    equals the full-plane dequantize oracle (read + plain softmax) for the
+    5opt codec, across a tile-straddling pos."""
+    from repro.configs.base import get_reduced_config
+    from repro.models import mla as mla_mod
+    from repro.models.cache import CacheConfig
+    cfg = get_reduced_config("deepseek-v2-lite-16b")
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    B, H, Tmax, pos = 2, cfg.n_heads, 24, 13
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True),
+                                 impl="reference")
+    cache = mla_mod.mla_cache_init(cfg, B, Tmax, cache_cfg=cc)
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    cache = mla_mod.MLACache(
+        cache.c_kv.append(jax.random.normal(k1, (B, pos, r)), jnp.int32(0)),
+        cache.k_pe.append(jax.random.normal(k2, (B, pos, dr)), jnp.int32(0)),
+        jnp.asarray(pos, jnp.int32))
+    q_lat = jax.random.normal(k3, (B, 1, H, r))
+    q_pe = jax.random.normal(k4, (B, 1, H, dr))
+    sm = (cfg.qk_nope_dim + dr) ** -0.5
+    got = mla_mod._sparq_mla_decode(q_lat, q_pe, cache, sm_scale=sm,
+                                    out_dtype=jnp.float32, bk=8)
+    # oracle: full-plane read + plain softmax (the PR 1 path)
+    c_full, pe_full = cache.c_kv.read(), cache.k_pe.read()
+    s = (jnp.einsum("bthr,bsr->bhts", q_lat, c_full) +
+         jnp.einsum("bthe,bse->bhts", q_pe, pe_full)) * sm
+    kpos = jnp.arange(Tmax)
+    s = jnp.where((kpos < cache.pos)[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhts,bsr->bthr", p, c_full)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_generate_capacity_check(tiny_lm):
+    """DecodeEngine.generate raises host-side (before tracing) when prompt
+    + generation would overflow the cache, instead of letting the traced
+    dynamic_update_slice silently clamp."""
+    from repro.launch.serve import DecodeEngine
+    model, params, batch = tiny_lm
+    engine = DecodeEngine(model, CacheConfig.fp32())
+    with pytest.raises(ValueError, match="overflow"):
+        engine.generate(params, batch, gen=12, max_len=30)  # needs 36
+
+
+def test_append_overflow_silently_clamps():
+    """Regression doc for the underlying hazard: appending past Tmax does
+    NOT error — dynamic_update_slice_in_dim clamps the start index, so the
+    write lands on (and overwrites) the newest slots. This is why the
+    engine must check capacity host-side."""
+    t = CachedTensor.init((1, 4, 8), CacheConfig.fp32())
+    first = jnp.full((1, 4, 8), 1.0)
+    t = t.append(first, jnp.int32(0))
+    extra = jnp.full((1, 2, 8), 2.0)
+    t2 = t.append(extra, jnp.int32(3))       # pos 3 + 2 new > Tmax=4
+    out = np.asarray(t2.read())
+    np.testing.assert_array_equal(out[0, :2], 1.0)   # oldest intact
+    np.testing.assert_array_equal(out[0, 2:], 2.0)   # newest overwritten
+
+
+def test_bytes_per_value_single_source_of_truth():
+    """Acceptance: ops (roofline) and cache (report) accountings agree for
+    every serving preset — data plane + ShiftCtrl side-band == combined
+    roofline figure; MuxCtrl is charged only when vSPARQ is on."""
+    from repro.kernels import ops
+    from repro.launch.serve import SPARQ_PRESETS, make_cache_config
+    for name, scfg in SPARQ_PRESETS.items():
+        cc = make_cache_config("sparq", scfg)
+        total = bytes_per_value(cc) + ctrl_bytes_per_value(cc)
+        assert total == pytest.approx(ops.bytes_per_value(cc.sparq)), name
+        # and the no-vsparq variant must not charge the 0.5-bit MuxCtrl
+        if scfg is not None and scfg.enabled:
+            novs = dataclasses.replace(scfg, vsparq=False)
+            cc_novs = make_cache_config("sparq", novs)
+            assert bytes_per_value(cc) - bytes_per_value(cc_novs) == \
+                pytest.approx(0.5 / 8.0), name
+            assert ops.bytes_per_value(novs) == \
+                pytest.approx((novs.bits + 3) / 8.0), name

@@ -225,3 +225,114 @@ def test_dequant_wrapper_pads_and_unpads():
     got = ops.sparq_dequantize(store, meta, impl="pallas", bm=64)
     assert got.shape == x.shape
     np.testing.assert_array_equal(np.asarray(got), np.asarray(codes))
+
+
+# ----------------------------------------------------------------------
+# fused packed-cache decode attention (§5.1 meta-decode inside the kernel)
+# ----------------------------------------------------------------------
+
+def _mk_cache_planes(cfg, B=2, Tmax=24, KV=2, hd=16, pos=13, seed=0):
+    """Quantize random K/V up to `pos` into packed (data, meta, scale)
+    planes via the CachedTensor write path; slots >= pos stay zeroed."""
+    from repro.models.cache import CacheConfig, CacheStore
+    cc = CacheConfig(layout="sparq", sparq=cfg)
+    st = CacheStore.init((B, Tmax, KV, hd), cc)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k = jax.random.normal(k1, (B, pos, KV, hd))
+    v = jax.random.normal(k2, (B, pos, KV, hd))
+    if not cfg.signed:
+        k, v = jnp.abs(k), jnp.abs(v)
+    st = st.update(k, v)
+    q = jax.random.normal(k3, (B, 1, 2 * KV, hd))  # H=2*KV -> GQA groups
+    return q, st
+
+
+DECODE_CODECS = [
+    SparqConfig.opt5(signed=True),                    # vsparq + signed
+    SparqConfig.opt5(signed=True, vsparq=False),      # no vsparq
+    SparqConfig.opt6(signed=True),                    # 3-bit window
+    # unsigned magnitudes at act_bits=7 so codes (<=127) still fit int8
+    SparqConfig.opt5(signed=False, act_bits=7),
+    SparqConfig.opt5(signed=False, vsparq=False, act_bits=7),
+    SparqConfig(enabled=False, signed=True),          # lossless int8 grid
+]
+
+
+@pytest.mark.parametrize("window", [0, 5])
+@pytest.mark.parametrize("cfg", DECODE_CODECS, ids=lambda c: c.name)
+def test_decode_attn_ref_vs_pallas_vs_dequant_oracle(cfg, window):
+    """Bit-exactness of the fused decode path: the tiled jnp oracle
+    (ref_sparq_decode_attn) and the Pallas kernel (interpret mode) agree
+    bit for bit, and both match the dequantize-then-attend oracle
+    (decode_attention_dequant) to f32 rounding."""
+    from repro.models.attention import decode_attention_dequant
+    B, Tmax = 2, 24
+    pos = 13                                          # non-multiple of bk
+    q, st = _mk_cache_planes(cfg, B=B, Tmax=Tmax, pos=pos)
+    kpos = jnp.broadcast_to(jnp.arange(Tmax, dtype=jnp.int32)[None],
+                            (B, Tmax))
+    args = (q, st.k.data, st.k.meta, st.k.scale,
+            st.v.data, st.v.meta, st.v.scale, kpos, st.pos - 1)
+    ref = ops.sparq_decode_attention(*args, window=window,
+                                     impl="reference", bk=8)
+    pal = ops.sparq_decode_attention(*args, window=window,
+                                     impl="pallas", bk=8)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+    oracle = decode_attention_dequant(q, st, window=window)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pos", [1, 7, 16, 23])
+def test_decode_attn_ragged_pos_and_tiles(pos):
+    """Length masking from `pos` across tile boundaries: every fill level
+    (including tile-straddling and full cache) matches the oracle, with a
+    tile size that does NOT divide Tmax (dispatcher pads with kpos=-1)."""
+    from repro.models.attention import decode_attention_dequant
+    cfg = SparqConfig.opt5(signed=True)
+    B, Tmax = 2, 24
+    q, st = _mk_cache_planes(cfg, B=B, Tmax=Tmax, pos=pos)
+    kpos = jnp.broadcast_to(jnp.arange(Tmax, dtype=jnp.int32)[None],
+                            (B, Tmax))
+    args = (q, st.k.data, st.k.meta, st.k.scale,
+            st.v.data, st.v.meta, st.v.scale, kpos, st.pos - 1)
+    ref = ops.sparq_decode_attention(*args, impl="reference", bk=7)
+    pal = ops.sparq_decode_attention(*args, impl="pallas", bk=7)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+    oracle = decode_attention_dequant(q, st)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attn_ring_slot_positions():
+    """The windowed variant with ring-ordered slot positions (kpos is the
+    rotated slot_pos array, not arange) masks by absolute position."""
+    from repro.models.cache import CacheConfig, CacheStore
+    cfg = SparqConfig(enabled=False, signed=True)     # exact grid
+    B, W, KV, hd = 2, 8, 2, 16
+    window = 6
+    cc = CacheConfig(layout="sparq", sparq=cfg)
+    st = CacheStore.init((B, W, KV, hd), cc)
+    kv = jax.random.normal(KEY, (B, W, KV, hd))
+    st = st.update(kv, kv)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, 1, 2 * KV, hd))
+    # ring state: slots hold absolute positions 8..15 rotated by 3
+    slot_pos = jnp.broadcast_to(
+        jnp.roll(jnp.arange(8, 16, dtype=jnp.int32), 3)[None], (B, W))
+    cur = jnp.asarray(15, jnp.int32)
+    out = ops.sparq_decode_attention(
+        q, st.k.data, st.k.meta, st.k.scale,
+        st.v.data, st.v.meta, st.v.scale, slot_pos, cur,
+        window=window, impl="pallas", bk=4)
+    # oracle: dense attention over the dequantized ring with the same mask
+    kf = st.k.read()
+    ok = (slot_pos <= cur) & (slot_pos > cur - window)
+    G = 2
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, kf) * hd ** -0.5
+    s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bkgs,bskh->bkgh", p, st.v.read()).reshape(
+        B, 1, 2 * KV, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
