@@ -4,7 +4,9 @@
 
 Output rows: table,config,metric,value. The decode_cache scenario also
 writes BENCH_decode.json (decode tok/s + modeled cache bytes per KV-cache
-layout) so the serving-perf trajectory accumulates across PRs.
+layout) and paged_serving writes BENCH_paged.json (paged vs contiguous
+engine tok/s + pool utilization under a ragged continuous-batching
+workload) so the serving-perf trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
@@ -54,9 +56,104 @@ def decode_cache_rows(out_json: str = "BENCH_decode.json",
     return rows
 
 
+def paged_serving_rows(out_json: str = "BENCH_paged.json",
+                       impls: tuple = ("reference",)) -> list:
+    """Paged continuous-batching benchmark -> BENCH_paged.json.
+
+    Two comparisons on the reduced tiny LM with the sparq-5opt cache:
+
+    equal-active-batch: the same uniform workload (B=4, prompt 32, gen 16)
+    through the contiguous scan engine and the paged engine — isolates the
+    cost of paging + per-step host scheduling at identical parallelism
+    (acceptance: steady-state paged tok/s within ~10% of contiguous).
+
+    ragged continuous batching: 8 requests with ragged prompts/gens over 4
+    sequence slots. The page pool holds fewer slots than the requests'
+    summed lengths *and* fewer than the contiguous engine's whole
+    allocation for the same concurrency — short sequences no longer strand
+    the capacity long ones need; eviction recycles pages mid-run.
+    """
+    import numpy as np
+
+    from repro.launch import serve as serve_mod
+    rows, blob = [], {}
+
+    base = ["--arch", "tinyllama-1.1b", "--reduced", "--batch", "4",
+            "--prompt-len", "32", "--gen", "16", "--sparq", "5opt",
+            "--kv-cache", "sparq", "--calibrate", "1"]
+    for impl in impls:
+        cfg = f"tinyllama_reduced_sparq_{impl}"
+        stats_c = serve_mod.main(base + ["--impl", impl])
+        stats_p = serve_mod.main(base + ["--impl", impl, "--engine", "paged",
+                                         "--page-size", "16",
+                                         "--n-pages", "24"])
+        ratio = stats_p["decode_tok_s"] / max(stats_c["decode_tok_s"], 1e-9)
+        blob[f"uniform_{impl}"] = {
+            "contiguous_tok_s": round(stats_c["decode_tok_s"], 2),
+            "paged_tok_s": round(stats_p["decode_tok_s"], 2),
+            "paged_over_contiguous": round(ratio, 3),
+            "peak_pages_used": stats_p["peak_pages_used"],
+            "pool_pages": stats_p["pool_pages"],
+        }
+        rows += [(cfg, "contiguous_tok_s", round(stats_c["decode_tok_s"], 2)),
+                 (cfg, "paged_tok_s", round(stats_p["decode_tok_s"], 2)),
+                 (cfg, "paged_over_contiguous", round(ratio, 3))]
+
+    # ragged continuous batching: more requests than slots, multi-page
+    # sequences, pool smaller than both the summed lengths and the
+    # contiguous allocation at equal concurrency
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_reduced_config
+    from repro.core.sparq import SparqConfig
+    from repro.models.cache import CacheConfig
+    from repro.models.model import Model
+    cfg_m = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False)
+    model = Model(cfg_m)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lens = [48, 16, 64, 24, 40, 16, 56, 32]
+    gens = [16, 32, 8, 24, 16, 28, 12, 20]
+    reqs = [serve_mod.Request(rng.integers(0, cfg_m.vocab_size, (L,)), g)
+            for L, g in zip(lens, gens)]
+    ps, n_pages, S = 16, 22, 4
+    ragged_impl = impls[0]      # one impl for the ragged run (recorded)
+    engine = serve_mod.ContinuousBatchingEngine(
+        model, CacheConfig.sparq_cache(SparqConfig.opt5(signed=True),
+                                       impl=ragged_impl),
+        page_size=ps, n_pages=n_pages, max_active=S, max_seq_len=80)
+    engine.run(params, reqs)                    # compile pass, untimed
+    _, stats = engine.run(params, reqs)
+    summed = sum(L + g - 1 for L, g in zip(lens, gens))
+    contig_equiv = S * (max(L + g - 1 for L, g in zip(lens, gens)) + 8)
+    blob["ragged"] = {
+        "impl": ragged_impl,
+        "requests": len(reqs),
+        "active_slots": S,
+        "page_size": ps,
+        "pool_slots": stats["pool_slots"],
+        "summed_seq_lengths": summed,           # > pool_slots: pages recycle
+        "contiguous_equiv_slots": contig_equiv,  # scan engine at B=4
+        "decode_tok_s": round(stats["decode_tok_s"], 2),
+        "peak_pages_used": stats["peak_pages_used"],
+        "peak_pool_utilization": round(stats["peak_pool_utilization"], 3),
+    }
+    assert summed > stats["pool_slots"], "workload must overflow the pool"
+    rows += [("tinyllama_reduced_ragged", k, v)
+             for k, v in blob["ragged"].items()]
+    with open(out_json, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_json}", file=sys.stderr)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", default="1,2,3,4,5,6,stats,serve,decode_cache")
+    ap.add_argument("--tables",
+                    default="1,2,3,4,5,6,stats,serve,decode_cache,"
+                            "paged_serving")
     ap.add_argument("--decode-impls", default="reference,pallas",
                     help="fused-decode impls to sweep in decode_cache "
                          "(pallas runs in interpret mode off-TPU: exact "
@@ -104,6 +201,10 @@ def main() -> None:
     if "decode_cache" in want:
         # KV-cache layout sweep (fp32 / bf16 / sparq) -> BENCH_decode.json
         common.emit("decode_cache", decode_cache_rows(
+            impls=tuple(args.decode_impls.split(","))))
+    if "paged_serving" in want:
+        # paged vs contiguous engines + ragged continuous batching
+        common.emit("paged_serving", paged_serving_rows(
             impls=tuple(args.decode_impls.split(","))))
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 

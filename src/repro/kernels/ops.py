@@ -1,6 +1,9 @@
 """Public jit'd wrappers around the SPARQ kernels.
 
-`quantized_matmul` is what the model layers call. Dispatch:
+`quantized_matmul` is what the model layers call;
+`sparq_decode_attention` / `sparq_paged_decode_attention` are the fused
+packed-cache decode reads (contiguous planes vs block-table-gathered
+pages). Dispatch everywhere:
   impl="pallas"     — the fused TPU kernel (interpret=True off-TPU);
   impl="reference"  — pure-jnp oracle semantics via an int dot_general
                       (what the XLA int8 MXU path lowers to on TPU);
@@ -12,6 +15,7 @@ decisions are unchanged; M/N zero-padding is dropped from the result).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +23,8 @@ import jax.numpy as jnp
 from repro.core.quantizer import QScale
 from repro.core.sparq import SparqConfig
 from repro.kernels import ref as _ref
-from repro.kernels.sparq_decode_attn import sparq_decode_attn_pallas
+from repro.kernels.sparq_decode_attn import (sparq_decode_attn_pallas,
+                                             sparq_paged_decode_attn_pallas)
 from repro.kernels.sparq_dequant import sparq_dequant_pallas
 from repro.kernels.sparq_matmul import sparq_matmul_pallas
 from repro.kernels.sparq_quant import sparq_quant_pallas
@@ -27,6 +32,11 @@ from repro.kernels.sparq_quant import sparq_quant_pallas
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# default Tk-tile size of the fused decode-attention kernels; callers pass
+# bk=None to defer here (CachedTensor.bk overrides per cache config)
+DEFAULT_BK = 128
 
 
 def _pad_to(x: jnp.ndarray, mult: int, axis: int,
@@ -111,8 +121,17 @@ def sparq_quantize(
     impl: str = "auto",
     bm: int = 256,
 ):
-    """Standalone SPARQ quantization (KV-cache path). Returns
-    (codes int8, meta int8) with x's shape."""
+    """Standalone SPARQ quantization (KV-cache write path).
+
+    Args:
+      x:      float (..., K); the last axis is the vSPARQ pairing axis
+              (K even).
+      act_qs: QScale whose f32 `scale` is the quantization step (already
+              resolved/frozen by the cache — see CachedTensor).
+      cfg:    codec; `cfg.enabled=False` is plain int8 (empty meta).
+    Returns (codes int8, meta int8), both with x's shape. `codes` are the
+    *reconstructed* values (window << shift, sign applied) ready for an
+    int matmul; `sparq_pack` shifts them down to the §5.1 stored form."""
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "reference"
     lead = x.shape[:-1]
@@ -152,7 +171,13 @@ def sparq_dequantize(
     impl: str = "auto",
     bm: int = 256,
 ) -> jnp.ndarray:
-    """Meta-decode (KV-cache read path): (store, meta) -> int8 codes."""
+    """Meta-decode (KV-cache read fallback): (store, meta) -> int8 codes.
+
+    store/meta: int8 (..., K) §5.1 planes (see docs/packed_format.md).
+    Returns the reconstructed int8 codes (sign * (|store| << ShiftCtrl));
+    multiply by the plane's scale for floats. The decode *hot* path never
+    calls this — the fused decode-attention kernels do the same decode
+    tile-by-tile in-loop."""
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "reference"
     lead = store.shape[:-1]
@@ -181,14 +206,28 @@ def sparq_decode_attention(
     cur: jnp.ndarray,         # scalar int32: position of the decoded token
     window: int = 0,
     impl: str = "auto",
-    bk: int = 128,
+    bk: Optional[int] = None,
 ) -> jnp.ndarray:
     """Fused flash-decode attention over the raw packed SPARQ cache planes
     (§5.1 meta-decode inside the Tk-tile loop; no full-plane dequantize).
 
     Serves both the linear cache (kpos = arange, masked by kpos <= cur) and
     the sliding-window ring cache (kpos = slot_pos + static `window`).
-    Returns f32 (B, 1, H, hd)."""
+
+    Args:
+      q:       f32/bf16 [B, 1, H, hd] — one query token per sequence.
+      k_data:  int8 [B, Tk, KV, hd] window codes (§5.1 data plane).
+      k_meta:  int8 [B, Tk, KV, hd] packed [mux|shift_hi|shift_lo] bytes.
+      k_scale: f32 scalar per-site scale (v_* likewise for the V plane).
+      kpos:    int32 [B, Tk] absolute position per cache slot (-1 = empty).
+      cur:     int32 scalar — position of the token being decoded.
+      window:  static sliding-window bound (0 = full causal).
+      impl:    reference | pallas | auto (pallas on TPU, else reference).
+      bk:      Tk-tile size (None -> DEFAULT_BK, clamped to Tk). Tile
+               decomposition determines f32 summation order; match it
+               (bk == page_size) when comparing against the paged path
+               bit for bit.
+    Returns f32 [B, 1, H, hd]."""
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "reference"
     B, Tq, H, hd = q.shape
@@ -196,6 +235,8 @@ def sparq_decode_attention(
     Tk, KV = k_data.shape[1], k_data.shape[2]
     G = H // KV
     qg = q.reshape(B, KV, G, hd)
+    bk = DEFAULT_BK if bk is None else bk
+    assert bk >= 1, f"bk must be >= 1, got {bk}"
     bk = min(bk, Tk)
     # pad Tk to a tile multiple in the packed domain (int8 planes + the
     # kpos vector, padded with -1 so padding is masked out) — still ~7x
@@ -215,6 +256,59 @@ def sparq_decode_attention(
         out = sparq_decode_attn_pallas(
             qg, kd, km, ks, vd, vm, vs, kp, cur, window=window, bk=bk,
             interpret=not _on_tpu())
+    else:
+        raise ValueError(impl)
+    return out.reshape(B, 1, H, hd)
+
+
+def sparq_paged_decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, hd) float, one token per sequence
+    k_data: jnp.ndarray,       # (P, ps, KV, hd) int8 window-code page pool
+    k_meta: jnp.ndarray,       # (P, ps, KV, hd) int8 packed meta-byte pool
+    k_scale: jnp.ndarray,      # (B,) f32 per-sequence site scale
+    v_data: jnp.ndarray,
+    v_meta: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    block_table: jnp.ndarray,  # (B, NB) int32 page per logical block (-1 =
+                               # unallocated; masked out)
+    cur: jnp.ndarray,          # (B,) int32 per-sequence decoded position
+                               # (< 0 = inactive slot, output is zeros)
+    window: int = 0,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Fused flash-decode attention over a *paged* packed SPARQ cache.
+
+    Same §5.1 in-loop meta-decode as `sparq_decode_attention`, but the K/V
+    planes live in one global pool of fixed-size pages shared by all
+    sequences; each sequence reads its own pages through `block_table`
+    (one Tk tile == one page, gathered by scalar-prefetched page index).
+    Slot positions are computed from the logical block index, so the
+    masking/GQA/window arithmetic is the contiguous kernel's — with
+    page_size == bk the two paths are bit-identical on identical bytes.
+
+    `cur` and the site scales are per-sequence: a continuous-batching step
+    serves slots of different lengths (and different calibrations) in one
+    traced call. No padding is needed — the pool geometry is static.
+    Returns f32 (B, 1, H, hd)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    B, Tq, H, hd = q.shape
+    assert Tq == 1, f"decode attention takes one query token, got Tq={Tq}"
+    KV = k_data.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    bt = block_table.astype(jnp.int32)
+    cur = jnp.broadcast_to(jnp.asarray(cur, jnp.int32), (B,))
+    ks = jnp.broadcast_to(jnp.asarray(k_scale, jnp.float32), (B,))
+    vs = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32), (B,))
+    if impl == "reference":
+        out = _ref.ref_sparq_paged_decode_attn(
+            qg, k_data, k_meta, ks, v_data, v_meta, vs, bt, cur,
+            window=window)
+    elif impl == "pallas":
+        out = sparq_paged_decode_attn_pallas(
+            qg, k_data, k_meta, ks, v_data, v_meta, vs, bt, cur,
+            window=window, interpret=not _on_tpu())
     else:
         raise ValueError(impl)
     return out.reshape(B, 1, H, hd)

@@ -92,6 +92,15 @@ def ref_sparq_dequant(store: jnp.ndarray, meta: jnp.ndarray) -> jnp.ndarray:
     return (jnp.sign(q) * jnp.left_shift(jnp.abs(q), shift)).astype(jnp.int8)
 
 
+def _meta_decode32(store, meta, scale):
+    """§5.1 meta-decode of one packed tile, in int32 (no int8 narrowing) —
+    the exact datapath of the fused decode kernels."""
+    q32 = store.astype(jnp.int32)
+    shift = meta_shifts(meta)
+    recon = jnp.sign(q32) * jnp.left_shift(jnp.abs(q32), shift)
+    return recon.astype(jnp.float32) * scale
+
+
 def ref_sparq_decode_attn(q, k_data, k_meta, k_scale, v_data, v_meta,
                           v_scale, kpos, cur, *, window: int = 0,
                           bk: int = 128):
@@ -110,13 +119,7 @@ def ref_sparq_decode_attn(q, k_data, k_meta, k_scale, v_data, v_meta,
     qf = q.astype(jnp.float32)
     sm_scale = hd ** -0.5
 
-    def _decode(store, meta, scale):
-        # meta-decode in int32 without the int8 narrowing of
-        # ref_sparq_dequant — identical to the kernel's datapath
-        q32 = store.astype(jnp.int32)
-        shift = meta_shifts(meta)
-        recon = jnp.sign(q32) * jnp.left_shift(jnp.abs(q32), shift)
-        return recon.astype(jnp.float32) * scale
+    _decode = _meta_decode32
 
     def tile(carry, t):
         m, l, acc = carry
@@ -148,4 +151,64 @@ def ref_sparq_decode_attn(q, k_data, k_meta, k_scale, v_data, v_meta,
     l0 = jnp.zeros((B, KV, G, 1), jnp.float32)
     a0 = jnp.zeros((B, KV, G, hd), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(tile, (m0, l0, a0), jnp.arange(Tk // bk))
+    return acc / jnp.maximum(l, 1e-30)
+
+
+def ref_sparq_paged_decode_attn(q, k_data, k_meta, k_scale, v_data, v_meta,
+                                v_scale, block_table, cur, *,
+                                window: int = 0):
+    """Tiled oracle for sparq_paged_decode_attn_pallas: the block-table
+    gather path over a global page pool. One Tk tile == one fixed-size page,
+    fetched through the per-sequence block table; everything else (per-tile
+    §5.1 meta-decode, online-softmax update order, masking arithmetic) is
+    the contiguous oracle's, so with page_size == bk and identical packed
+    bytes the two paths agree bit for bit.
+
+    q           [B, KV, G, hd] float — one query token per sequence
+    k/v planes  [P, ps, KV, hd] int8 — the global page pool (any page the
+                block table never names, e.g. a trash page, is simply dead)
+    k/v scale   [B] f32 — per-sequence site scales
+    block_table [B, NB] int32 — physical page per logical block (-1 = not
+                allocated; masked out, gather index clamped to 0)
+    cur         [B] int32 — per-sequence position of the decoded token
+                (-1/-2 = inactive slot: fully masked, output 0)
+    Returns f32 [B, KV, G, hd].
+    """
+    B, KV, G, hd = q.shape
+    ps = k_data.shape[1]
+    NB = block_table.shape[1]
+    qf = q.astype(jnp.float32)
+    sm_scale = hd ** -0.5
+    k_scale = jnp.asarray(k_scale, jnp.float32).reshape(B, 1, 1, 1)
+    v_scale = jnp.asarray(v_scale, jnp.float32).reshape(B, 1, 1, 1)
+    cur_b = jnp.asarray(cur, jnp.int32).reshape(B, 1)
+
+    def tile(carry, t):
+        m, l, acc = carry
+        pages = jax.lax.dynamic_slice_in_dim(block_table, t, 1, 1)[:, 0]
+        safe = jnp.maximum(pages, 0)                   # [B]
+        k = _meta_decode32(k_data[safe], k_meta[safe], k_scale)
+        s = jnp.einsum("bkgh,bskh->bkgs", qf, k,
+                       preferred_element_type=jnp.float32) * sm_scale
+        kp = t * ps + jnp.arange(ps, dtype=jnp.int32)[None]    # [1, ps]
+        ok = (pages >= 0)[:, None] & (kp <= cur_b)
+        if window:
+            ok &= kp > cur_b - window
+        okb = ok[:, None, None, :]                     # [B, 1, 1, ps]
+        s = jnp.where(okb, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(okb, p, 0.0)
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        v = _meta_decode32(v_data[safe], v_meta[safe], v_scale)
+        pv = jnp.einsum("bkgs,bskh->bkgh", p, v,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr + pv), None
+
+    m0 = jnp.full((B, KV, G, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, 1), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(tile, (m0, l0, a0), jnp.arange(NB))
     return acc / jnp.maximum(l, 1e-30)

@@ -51,9 +51,14 @@ def _meta_decode_f32(store, meta, scale):
     return recon.astype(jnp.float32) * scale
 
 
-def _kernel(q_ref, kd_ref, km_ref, vd_ref, vm_ref, kpos_ref, cur_ref,
-            kscale_ref, vscale_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            window: int, sm_scale: float):
+def _flash_tile_body(q_ref, o_ref, m_ref, l_ref, acc_ref, k, v, ok, *,
+                     sm_scale: float):
+    """One Tk-tile online-softmax update, shared by the contiguous and
+    paged kernels (which differ only in how they fetch the K/V tile and
+    build the `ok` mask). Grid axis 2 is the sequential tile axis; the
+    flash statistics (m, l, acc) persist in VMEM scratch across tiles.
+    Keeping this arithmetic in one place is what keeps the two kernels'
+    bit-identity guarantee honest — the f32 op sequence cannot drift."""
     t = pl.program_id(2)
 
     @pl.when(t == 0)
@@ -63,17 +68,9 @@ def _kernel(q_ref, kd_ref, km_ref, vd_ref, vm_ref, kpos_ref, cur_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32)                    # [G, hd]
-    k = _meta_decode_f32(kd_ref[0, :, 0], km_ref[0, :, 0],
-                         kscale_ref[0, 0])                 # [bk, hd]
     s = jax.lax.dot_general(
         q, k, dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * sm_scale     # [G, bk]
-
-    kpos = kpos_ref[...]                                   # [1, bk]
-    cur = cur_ref[0, 0]
-    ok = (kpos >= 0) & (kpos <= cur)
-    if window:
-        ok &= kpos > cur - window
     s = jnp.where(ok, s, -jnp.inf)
 
     m_prev = m_ref[...]                                    # [G, 1]
@@ -84,8 +81,6 @@ def _kernel(q_ref, kd_ref, km_ref, vd_ref, vm_ref, kpos_ref, cur_ref,
     corr = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
     l_new = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
 
-    v = _meta_decode_f32(vd_ref[0, :, 0], vm_ref[0, :, 0],
-                         vscale_ref[0, 0])                 # [bk, hd]
     pv = jax.lax.dot_general(
         p, v, dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                # [G, hd]
@@ -96,6 +91,22 @@ def _kernel(q_ref, kd_ref, km_ref, vd_ref, vm_ref, kpos_ref, cur_ref,
     @pl.when(t == pl.num_programs(2) - 1)
     def _emit():
         o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _kernel(q_ref, kd_ref, km_ref, vd_ref, vm_ref, kpos_ref, cur_ref,
+            kscale_ref, vscale_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            window: int, sm_scale: float):
+    k = _meta_decode_f32(kd_ref[0, :, 0], km_ref[0, :, 0],
+                         kscale_ref[0, 0])                 # [bk, hd]
+    v = _meta_decode_f32(vd_ref[0, :, 0], vm_ref[0, :, 0],
+                         vscale_ref[0, 0])
+    kpos = kpos_ref[...]                                   # [1, bk]
+    cur = cur_ref[0, 0]
+    ok = (kpos >= 0) & (kpos <= cur)
+    if window:
+        ok &= kpos > cur - window
+    _flash_tile_body(q_ref, o_ref, m_ref, l_ref, acc_ref, k, v, ok,
+                     sm_scale=sm_scale)
 
 
 @functools.partial(jax.jit,
@@ -146,3 +157,95 @@ def sparq_decode_attn_pallas(
         interpret=interpret,
     )(q, k_data, k_meta, v_data, v_meta, kpos,
       cur.reshape(1, 1), k_scale.reshape(1, 1), v_scale.reshape(1, 1))
+
+
+# ----------------------------------------------------------------------
+# paged variant: block-table gather over a global page pool
+# ----------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, cur_ref, ks_ref, vs_ref,       # scalar prefetch
+                  q_ref, kd_ref, km_ref, vd_ref, vm_ref,  # tensor inputs
+                  o_ref, m_ref, l_ref, acc_ref, *,
+                  window: int, sm_scale: float, ps: int):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    k = _meta_decode_f32(kd_ref[0, :, 0], km_ref[0, :, 0],
+                         ks_ref[b])                        # [ps, hd]
+    v = _meta_decode_f32(vd_ref[0, :, 0], vm_ref[0, :, 0],
+                         vs_ref[b])
+    # logical slot positions of this page: block t covers [t*ps, (t+1)*ps)
+    kpos = t * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    cur = cur_ref[b]
+    ok = (bt_ref[b, t] >= 0) & (kpos <= cur)
+    if window:
+        ok &= kpos > cur - window
+    _flash_tile_body(q_ref, o_ref, m_ref, l_ref, acc_ref, k, v, ok,
+                     sm_scale=sm_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def sparq_paged_decode_attn_pallas(
+    q: jnp.ndarray,           # (B, KV, G, hd) float, one token per sequence
+    k_data: jnp.ndarray,      # (P, ps, KV, hd) int8 window-code page pool
+    k_meta: jnp.ndarray,      # (P, ps, KV, hd) int8 packed meta-byte pool
+    k_scale: jnp.ndarray,     # (B,) f32 per-sequence site scales
+    v_data: jnp.ndarray,
+    v_meta: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    block_table: jnp.ndarray,  # (B, NB) int32 page per block (-1 = unset)
+    cur: jnp.ndarray,         # (B,) int32 per-sequence decoded position
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Paged variant of `sparq_decode_attn_pallas`: the K/V planes live in a
+    global pool of fixed-size pages and each sequence's Tk tiles are fetched
+    through its block table, prefetched as scalars so the BlockSpec index
+    maps can name the physical page each grid step streams from HBM. The
+    Tk-tile loop runs over logical blocks (one page == one tile); slot
+    positions are computed from the block index, so masking/GQA/window logic
+    is unchanged from the contiguous kernel — with page_size == bk the two
+    are bit-identical on identical packed bytes.
+
+    Per-sequence `cur` and `k/v_scale` (continuous batching: every active
+    slot has its own length and its own calibration) ride along as scalar-
+    prefetch arguments; unallocated block-table entries are clamped to page
+    0 for the gather and masked out by `bt >= 0`. Returns f32 (B,KV,G,hd).
+    """
+    B, KV, G, hd = q.shape
+    P, ps = k_data.shape[:2]
+    NB = block_table.shape[1]
+    assert k_data.shape == (P, ps, KV, hd), (q.shape, k_data.shape)
+    assert hd % 2 == 0, hd
+    kernel = functools.partial(_paged_kernel, window=window,
+                               sm_scale=hd ** -0.5, ps=ps)
+    plane = pl.BlockSpec(
+        (1, ps, 1, hd),
+        lambda b, kv, t, bt, cur, ks, vs: (jnp.maximum(bt[b, t], 0), 0,
+                                           kv, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,      # block_table, cur, k_scale, v_scale
+        grid=(B, KV, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, kv, t, bt, cur, ks, vs: (b, kv, 0, 0)),
+            plane, plane, plane, plane,
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, hd), lambda b, kv, t, bt, cur, ks, vs: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # m: running max
+            pltpu.VMEM((G, 1), jnp.float32),    # l: running denominator
+            pltpu.VMEM((G, hd), jnp.float32),   # acc: running numerator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), cur.astype(jnp.int32),
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+      q, k_data, k_meta, v_data, v_meta)

@@ -1,27 +1,43 @@
-"""Serving driver: batched prefill + scan-based greedy decode with SPARQ
-quantization at both matmuls (the paper's compute path) and the KV cache
-(the §5.1 packed storage path — the memory-bound decode workload).
+"""Serving drivers: scan-based batch decode and paged continuous batching,
+both with SPARQ quantization at the matmuls (the paper's compute path) and
+the KV cache (the §5.1 packed storage path — the memory-bound workload).
 
-The decode loop is a `DecodeEngine`: generation runs as a single traced
-`jax.lax.scan` inside one jitted program — no per-step Python dispatch —
-so tok/s measures the model, not the host loop. With the sparq layout the
-decode step consumes the packed cache directly through the fused
-flash-decode kernel (kernels.sparq_decode_attn); the full fp K/V planes
-are never materialized. The cache layout is selected with
-`--kv-cache {fp32,bf16,sparq}`; `--impl` picks the kernel implementation
-(reference / Pallas / auto) for the quantized matmuls, the cache codec,
-and the fused decode-attention kernel.
+Two engines share the model and the fused packed-cache decode kernels:
 
-Local demo:
+  DecodeEngine (`--engine scan`, default)
+      Uniform batch, contiguous per-sequence cache. Generation is one
+      traced `jax.lax.scan` inside one jitted program — no per-step Python
+      dispatch — so tok/s measures the model, not the host loop.
+
+  ContinuousBatchingEngine (`--engine paged`)
+      Ragged requests over a *paged* cache (models.paging): one global pool
+      of fixed-size packed pages per layer, per-sequence block tables, a
+      host-side free-list allocator. The host loop only schedules —
+      admission (prefill + page adoption), page allocation on write, and
+      page free on eviction happen *between* steps; the inner decode step
+      stays a single traced function over all sequence slots, reading
+      pages through the block-table variant of the fused kernel.
+
+`--kv-cache {fp32,bf16,sparq}` selects the cache layout (the paged engine
+requires sparq — packed pages are its point); `--impl` picks the kernel
+implementation (reference / Pallas / auto) for the quantized matmuls, the
+cache codec, and the fused decode-attention kernels.
+
+Local demos:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --batch 4 --prompt-len 64 --gen 32 --sparq 5opt \
       --kv-cache sparq
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --engine paged --batch 4 --prompt-len 64 --gen 32 \
+      --sparq 5opt --kv-cache sparq --page-size 16 --n-pages 64
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import math
 import time
-from typing import Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +47,7 @@ from repro.configs.base import get_config, get_reduced_config
 from repro.core.sparq import SparqConfig
 from repro.data.pipeline import Batcher, DataConfig
 from repro.models import cache as cache_mod
+from repro.models import paging
 from repro.models.cache import CacheConfig
 from repro.models.common import QuantCtx
 from repro.models.model import Model
@@ -183,6 +200,283 @@ def serve(model: Model, params, batch, gen: int,
     return engine.generate(params, batch, gen, warmup=warmup)
 
 
+# ----------------------------------------------------------------------
+# continuous batching over the paged cache
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a prompt and a total token budget.
+
+    `gen` counts like DecodeEngine's: total greedy tokens to return,
+    including the one the prefill emits."""
+    tokens: np.ndarray          # [L] int prompt token ids
+    gen: int
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens)
+        assert self.tokens.ndim == 1 and self.tokens.size >= 1
+        assert self.gen >= 1
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one active sequence slot."""
+    rid: int                    # request index
+    target: int                 # total tokens to emit (== Request.gen)
+    generated: int              # tokens emitted so far (tok0 counts)
+    pages: List[int]            # physical pages owned by this sequence
+
+
+class ContinuousBatchingEngine:
+    """Greedy generation over ragged requests with a paged SPARQ cache.
+
+    The engine owns `max_active` sequence slots and one page pool
+    (`n_pages` pages of `page_size` slots, shared page ids across layers).
+    Requests queue for admission; a free slot admits the next request by
+    prefilling it alone through the ordinary contiguous path (which also
+    calibrates its per-sequence scales), then adopting the packed planes
+    into freshly allocated pages — bit-identical bytes, no requantization.
+    Every decode step is one jitted call over all S slots (inactive slots
+    are masked inside the kernel); between steps the host only does
+    scheduling: evict finished sequences (pages back to the free list),
+    admit from the queue, and allocate a page when a sequence's next token
+    crosses into an unallocated block. Pool exhaustion raises host-side,
+    before any tracing.
+
+    Restrictions: standard-KV attention families only (dense / MoE-GQA);
+    MLA latent caches, recurrent state, and encoder-decoder cross caches
+    keep the contiguous engine. The cache layout must be sparq.
+    """
+
+    def __init__(self, model: Model, cache_cfg: CacheConfig,
+                 ctx: Optional[QuantCtx] = None, scales_groups=None, *,
+                 page_size: int = 16, n_pages: int = 64,
+                 max_active: int = 4, max_seq_len: int = 512):
+        if cache_cfg.layout != "sparq":
+            raise ValueError("the paged engine stores packed §5.1 pages; "
+                             "use --kv-cache sparq")
+        bad = [k for k in model.kinds if k not in ("dense", "moe")]
+        if bad or model.cfg.family == "vlm":
+            raise ValueError(
+                f"paged serving supports standard-KV attention stacks only "
+                f"(got kinds {sorted(set(bad))or model.cfg.family}); use the "
+                f"scan engine for MLA/recurrent/enc-dec/VLM architectures")
+        if max_seq_len % page_size:
+            raise ValueError(f"max_seq_len {max_seq_len} must be a multiple "
+                             f"of page_size {page_size}")
+        self.model = model
+        self.cc = cache_cfg
+        self.ctx = ctx
+        self.scales_groups = scales_groups
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_active = max_active
+        self.n_blocks = max_seq_len // page_size
+        self._prefill = jax.jit(self._prefill_fn)
+        # donate the cache buffers: the pools are the dominant state and
+        # every step rewrites them in place — without donation XLA would
+        # copy all packed planes each token, doubling the traffic the
+        # packed format exists to shrink. run() rebinds `caches` on every
+        # update and derives pos_dev as a fresh slice, so donation is
+        # safe; `tok` is NOT donated (history keeps each step's tokens
+        # alive until final assembly).
+        self._step = jax.jit(self._step_fn, donate_argnums=(2,))
+        self._adopt = jax.jit(paging.adopt_prefill, donate_argnums=(0,))
+        self._evict = jax.jit(paging.evict_slot, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ traced
+    def _prefill_fn(self, params, batch, caches):
+        logits, caches = self.model.prefill(
+            params, batch, caches, ctx=self.ctx,
+            scales_groups=self.scales_groups)
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), caches
+
+    def _step_fn(self, params, tok, caches, pos):
+        logits, caches = self.model.decode_step(
+            params, tok, caches, pos, ctx=self.ctx,
+            scales_groups=self.scales_groups)
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), caches
+
+    # ------------------------------------------------------------ device
+    def _init_stores(self) -> list:
+        cfg = self.model.cfg
+        stores = []
+        for kind, count in self.model.groups_meta:
+            one = paging.PagedCacheStore.init(
+                self.max_active, self.n_pages, self.page_size,
+                self.n_blocks, cfg.n_kv_heads, cfg.head_dim, self.cc)
+            stores.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape).copy(),
+                one))
+        return stores
+
+    # ------------------------------------------------------------ public
+    def run(self, params, requests: Sequence[Request],
+            progress: bool = False) -> Tuple[Dict[int, np.ndarray], dict]:
+        """Serve every request to completion; greedy tokens per request.
+
+        Returns ({request_index: int32 [gen] tokens}, stats). Each run
+        starts from a fresh pool and fresh (uncalibrated) scales, so a run
+        is reproducible and re-entrant; jitted programs are reused across
+        runs (call once to warm up, again to time steady state).
+        """
+        requests = [r if isinstance(r, Request) else Request(*r)
+                    for r in requests]
+        ps, NB = self.page_size, self.n_blocks
+        for i, r in enumerate(requests):
+            need = len(r.tokens) + r.gen - 1
+            if need > NB * ps or math.ceil(need / ps) > self.n_pages:
+                raise ValueError(
+                    f"request {i} needs {need} slots "
+                    f"({math.ceil(need / ps)} pages) but the engine serves "
+                    f"at most {NB * ps} slots/sequence from {self.n_pages} "
+                    f"pages — raise max_seq_len/n_pages")
+
+        allocator = paging.PageAllocator(self.n_pages)
+        caches = self._init_stores()
+        S = self.max_active
+        tok = jnp.zeros((S, 1), jnp.int32)
+        slots: List[Optional[_Slot]] = [None] * S
+        host_bt = np.full((S, NB), -1, np.int64)
+        host_pos = np.full((S,), -1, np.int64)
+        queue = list(enumerate(requests))
+        first_tok: Dict[int, jnp.ndarray] = {}
+        history: List[Tuple[tuple, jnp.ndarray]] = []
+        peak_pages = 0
+        t_prefill = 0.0
+        n_steps = 0
+
+        t_run0 = time.time()
+        while True:
+            # ---- evict finished sequences: pages back to the free list
+            for s in range(S):
+                st = slots[s]
+                if st is not None and st.generated >= st.target:
+                    allocator.free(st.pages)
+                    caches = [self._evict(c, jnp.int32(s)) for c in caches]
+                    host_bt[s] = -1
+                    host_pos[s] = -1
+                    slots[s] = None
+
+            # ---- admit from the queue into free slots
+            while queue and None in slots:
+                rid, req = queue[0]
+                nbp = math.ceil(len(req.tokens) / ps)
+                if allocator.free_count < nbp:
+                    if not any(slots):
+                        allocator.alloc(nbp)    # raises PoolExhausted
+                    break                       # wait for evictions
+                queue.pop(0)
+                s = slots.index(None)
+                t0 = time.time()
+                pages = allocator.alloc(nbp)
+                tmp = self.model.init_cache(1, nbp * ps, cache_cfg=self.cc)
+                tok0, tmp = self._prefill(
+                    params, {"tokens": jnp.asarray(req.tokens)[None]}, tmp)
+                pages_dev = jnp.asarray(pages, jnp.int32)
+                caches = [self._adopt(c, t_g, jnp.int32(s), pages_dev)
+                          for c, t_g in zip(caches, tmp)]
+                tok = tok.at[s].set(tok0[0])
+                first_tok[rid] = tok0[0, 0]
+                slots[s] = _Slot(rid=rid, target=req.gen, generated=1,
+                                 pages=pages)
+                host_bt[s, :nbp] = pages
+                host_pos[s] = len(req.tokens)
+                # drain the async prefill dispatch before reading the
+                # clock, so its device time lands in t_prefill rather
+                # than decode_s (the contiguous engine blocks the same
+                # way before timing). Blocking on tok0 — not on the
+                # adopted caches — keeps pending decode steps of *other*
+                # slots out of t_prefill; the adoption copies themselves
+                # are small and stay with decode_s.
+                jax.block_until_ready(tok0)
+                t_prefill += time.time() - t0
+                peak_pages = max(peak_pages, allocator.used_count)
+                if progress:
+                    print(f"[admit] rid={rid} slot={s} prompt="
+                          f"{len(req.tokens)} pages={pages}")
+
+            if not any(slots):
+                break                           # drained
+
+            # ---- allocate the page the next token will be written into
+            # (skip slots that already hit their target: they are evicted
+            # at the top of the next iteration and must not grab pages)
+            dirty = False
+            for s in range(S):
+                if slots[s] is None or slots[s].generated >= slots[s].target:
+                    continue
+                blk = host_pos[s] // ps
+                if host_bt[s, blk] < 0:
+                    (pg,) = allocator.alloc(1)  # raises PoolExhausted
+                    slots[s].pages.append(pg)
+                    host_bt[s, blk] = pg
+                    dirty = True
+            peak_pages = max(peak_pages, allocator.used_count)
+            if dirty:
+                bt_dev = jnp.asarray(host_bt, jnp.int32)
+                caches = [dataclasses.replace(
+                    c, block_table=jnp.broadcast_to(
+                        bt_dev, c.block_table.shape))
+                    for c in caches]
+
+            # ---- one traced decode step over every slot. Slots that just
+            # hit their target still ride along (their masked write lands
+            # in their own pages, freed at eviction) but emit no token.
+            active = tuple((s, slots[s].rid) for s in range(S)
+                           if slots[s] is not None
+                           and slots[s].generated < slots[s].target)
+            if not active:
+                continue                        # every slot done: evict
+            pos_dev = caches[0].seq_pos[0]      # [S]; host_pos for active
+            tok, caches = self._step(params, tok, caches, pos_dev)
+            n_steps += 1
+            history.append((active, tok))
+            for s, _ in active:
+                slots[s].generated += 1
+                host_pos[s] += 1
+
+        jax.block_until_ready(tok)
+        t_total = time.time() - t_run0
+
+        # ---- assemble per-request token streams (single device fetch)
+        outputs: Dict[int, List[int]] = {
+            rid: [int(np.asarray(t))] for rid, t in first_tok.items()}
+        if history:
+            toks_np = np.asarray(
+                jnp.concatenate([t for _, t in history], axis=1))  # [S, n]
+            for i, (active, _) in enumerate(history):
+                for s, rid in active:
+                    outputs[rid].append(int(toks_np[s, i]))
+        results = {rid: np.asarray(t, np.int32)
+                   for rid, t in outputs.items()}
+        for rid, req in enumerate(requests):
+            assert len(results[rid]) == req.gen, (rid, len(results[rid]))
+
+        decode_s = max(t_total - t_prefill, 1e-9)
+        decode_tokens = sum(len(a) for a, _ in history)
+        pool_slots = self.n_pages * ps
+        total_tokens = sum(len(r.tokens) + r.gen - 1 for r in requests)
+        stats = {
+            "prefill_s": t_prefill,
+            "decode_s": decode_s,
+            "decode_steps": n_steps,
+            "decode_tok_s": decode_tokens / decode_s,
+            "pool_pages": self.n_pages,
+            "page_size": ps,
+            "pool_slots": pool_slots,
+            "peak_pages_used": peak_pages,
+            "peak_pool_utilization": peak_pages / max(self.n_pages, 1),
+            "total_tokens_served": total_tokens,
+            "cache_bytes_per_value":
+                cache_mod.bytes_per_value(self.cc),
+            "cache_total_bytes":
+                paging.modeled_pool_bytes(caches)["total_bytes"],
+        }
+        return results, stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -196,6 +490,16 @@ def main(argv=None):
     ap.add_argument("--impl", choices=("reference", "pallas", "auto"),
                     default="reference",
                     help="kernel impl for quantized matmuls + cache codec")
+    ap.add_argument("--engine", choices=("scan", "paged"), default="scan",
+                    help="scan: one traced lax.scan over a uniform batch; "
+                         "paged: continuous batching over the page pool")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged engine: cache slots per page")
+    ap.add_argument("--n-pages", type=int, default=64,
+                    help="paged engine: pages in the shared pool")
+    ap.add_argument("--max-active", type=int, default=0,
+                    help="paged engine: concurrent sequence slots "
+                         "(default: --batch)")
     ap.add_argument("--calibrate", type=int, default=2,
                     help="calibration batches (0 = dynamic scales)")
     ap.add_argument("--prequantize", action="store_true",
@@ -229,11 +533,33 @@ def main(argv=None):
             params = quantize_params(params, scfg.weight_bits)
 
     cache_cfg = make_cache_config(args.kv_cache, scfg, args.impl)
+    print(f"arch={cfg.name} sparq={args.sparq} kv-cache={args.kv_cache} "
+          f"impl={args.impl} engine={args.engine} batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+
+    if args.engine == "paged":
+        need = args.prompt_len + args.gen - 1
+        max_seq = -(-need // args.page_size) * args.page_size
+        engine = ContinuousBatchingEngine(
+            model, cache_cfg, ctx, scales,
+            page_size=args.page_size, n_pages=args.n_pages,
+            max_active=args.max_active or args.batch,
+            max_seq_len=max_seq)
+        reqs = [Request(np.asarray(batch["tokens"][b]), args.gen)
+                for b in range(args.batch)]
+        if not args.no_warmup:
+            engine.run(params, reqs)            # compile pass, untimed
+        results, stats = engine.run(params, reqs)
+        print(f"prefill {stats['prefill_s']*1e3:.0f} ms | decode "
+              f"{stats['decode_tok_s']:.1f} tok/s | pool "
+              f"{stats['peak_pages_used']}/{stats['pool_pages']} pages "
+              f"({stats['page_size']} slots) peak, "
+              f"{stats['cache_total_bytes']/1e6:.2f} MB modeled")
+        print("sample:", results[0][:16])
+        return stats
+
     toks, stats = serve(model, params, batch, args.gen, ctx, scales,
                         cache_cfg, warmup=not args.no_warmup)
-    print(f"arch={cfg.name} sparq={args.sparq} kv-cache={args.kv_cache} "
-          f"impl={args.impl} batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen}")
     print(f"compile {stats['compile_s']:.1f} s | "
           f"prefill {stats['prefill_s']*1e3:.0f} ms | decode "
           f"{stats['decode_tok_s']:.1f} tok/s | cache "

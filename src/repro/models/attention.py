@@ -156,14 +156,20 @@ def local_attention(q, k, v, *, window: int, q_offset=0):
     return out[:, :T].astype(q.dtype)
 
 
-def decode_attention(q, cache: CacheStore, *, window: int = 0):
+def decode_attention(q, cache, *, window: int = 0):
     """Single-token decode against a cache. q [B,1,H,hd].
 
+    paged store (models.paging.PagedCacheStore): the block-table gather
+    variant of the fused kernel streams the sequence's pages straight from
+    the global pool (per-sequence positions and scales).
     sparq layout: the raw packed planes (int8 window codes + meta bytes +
     per-site scale) go straight to the fused flash-decode kernel
     (kernels.ops.sparq_decode_attention) — the §5.1 meta-decode happens
     inside the Tk-tile loop and the fp K/V planes are never materialized.
     fp layout: the dequantize-then-attend fallback below."""
+    from repro.models.paging import PagedCacheStore, paged_decode_attention
+    if isinstance(cache, PagedCacheStore):
+        return paged_decode_attention(q, cache, window=window)
     if cache.k.is_sparq:
         from repro.kernels.ops import sparq_decode_attention
         B, Tk = cache.k.data.shape[:2]
@@ -172,7 +178,8 @@ def decode_attention(q, cache: CacheStore, *, window: int = 0):
         out = sparq_decode_attention(
             q, cache.k.data, cache.k.meta, cache.k.scale,
             cache.v.data, cache.v.meta, cache.v.scale,
-            kpos, cache.pos - 1, window=window, impl=cache.k.impl)
+            kpos, cache.pos - 1, window=window, impl=cache.k.impl,
+            bk=cache.k.bk)
         return out.astype(q.dtype)
     return decode_attention_dequant(q, cache, window=window)
 

@@ -41,6 +41,11 @@ Footprint accounting splits the §5.1 format into two planes:
 Both figures delegate to `kernels.ops` (`data_bytes_per_value` /
 `ctrl_bytes_per_value`), whose sum is the roofline's combined
 `kernels.ops.bytes_per_value` — one source of truth, enforced by test.
+
+This module is the *contiguous* cache (one [B, Tmax, ...] plane per
+site); `models/paging.py` stores the same packed format in a shared pool
+of fixed-size pages for continuous batching. Byte-level format reference:
+docs/packed_format.md (doctested against kernels.ops).
 """
 from __future__ import annotations
 
@@ -57,11 +62,25 @@ from repro.core.sparq import SparqConfig
 
 @dataclasses.dataclass(frozen=True)
 class CacheConfig:
-    """Decode-time cache storage policy (static; hashable jit argument)."""
+    """Decode-time cache storage policy (static; hashable jit argument).
+
+    Attributes:
+      layout:  "fp" (float planes in `dtype`) or "sparq" (§5.1 packed int8).
+      dtype:   storage dtype for the fp layout (ignored for sparq).
+      sparq:   codec for the sparq layout; None -> plain int8 (no trimming).
+      impl:    kernel impl for the codec + fused decode attention
+               ("reference" | "pallas" | "auto" = pallas on TPU).
+      attn_bk: Tk-tile size for the fused decode kernel (None -> default
+               128, clamped to the cache length). The tile split fixes the
+               f32 online-softmax summation order — set it to the paged
+               engine's page_size to compare contiguous vs paged decodes
+               bit for bit.
+    """
     layout: str = "fp"                     # fp | sparq
     dtype: Any = jnp.bfloat16              # storage dtype for fp layout
     sparq: Optional[SparqConfig] = None    # codec for sparq layout
     impl: str = "auto"                     # reference | pallas | auto
+    attn_bk: Optional[int] = None          # fused decode Tk-tile size
 
     def __post_init__(self):
         if self.layout not in ("fp", "sparq"):
@@ -111,7 +130,7 @@ def ctrl_bytes_per_value(cc: CacheConfig) -> float:
 
 @functools.partial(jax.tree_util.register_dataclass,
                    data_fields=("data", "meta", "scale"),
-                   meta_fields=("layout", "codec", "impl"))
+                   meta_fields=("layout", "codec", "impl", "bk"))
 @dataclasses.dataclass
 class CachedTensor:
     """One cache plane with time axis 1: [B, Tmax, ...rest].
@@ -120,6 +139,8 @@ class CachedTensor:
     sparq layout: data int8 window codes; meta int8 packed ShiftCtrl/MuxCtrl
                   byte per lane; scale f32 scalar (0.0 = uncalibrated
                   sentinel, set from the first write's dynamic range).
+    `bk` (static, from CacheConfig.attn_bk) is the fused decode kernel's
+    Tk-tile size; None keeps the kernel default.
     """
     data: jnp.ndarray
     meta: Optional[jnp.ndarray]
@@ -127,6 +148,7 @@ class CachedTensor:
     layout: str = "fp"
     codec: Optional[SparqConfig] = None
     impl: str = "auto"
+    bk: Optional[int] = None
 
     # -------------------------------------------------------------- init
     @staticmethod
@@ -139,7 +161,8 @@ class CachedTensor:
         return CachedTensor(data=jnp.zeros(shape, jnp.int8),
                             meta=jnp.zeros(shape, jnp.int8),
                             scale=jnp.zeros((), jnp.float32),
-                            layout="sparq", codec=cc.sparq, impl=cc.impl)
+                            layout="sparq", codec=cc.sparq, impl=cc.impl,
+                            bk=cc.attn_bk)
 
     @staticmethod
     def fp(data: jnp.ndarray) -> "CachedTensor":
@@ -169,7 +192,12 @@ class CachedTensor:
         return sparq_pack(codes, meta), meta
 
     def append(self, x_new: jnp.ndarray, pos: jnp.ndarray) -> "CachedTensor":
-        """Insert [B, T_new, ...] at time offset `pos` (T_new static)."""
+        """Insert a float [B, T_new, ...] slab at time offset `pos`.
+
+        T_new is static; `pos` is a traced int32 scalar. The sparq layout
+        quantizes on write (per-site scale resolved as above); note the
+        traced write clamps `pos` at the capacity rather than erroring —
+        callers bound-check host-side (see DecodeEngine.generate)."""
         if self.layout == "fp":
             data = jax.lax.dynamic_update_slice_in_dim(
                 self.data, x_new.astype(self.data.dtype), pos, axis=1)
@@ -184,7 +212,8 @@ class CachedTensor:
 
     def write_slots(self, x_new: jnp.ndarray,
                     slots: jnp.ndarray) -> "CachedTensor":
-        """Scatter [B, T_new, ...] into ring slots along axis 1."""
+        """Scatter float [B, T_new, ...] into ring slots (int32 [T_new])
+        along axis 1 — the sliding-window ring cache's rolling write."""
         if self.layout == "fp":
             data = self.data.at[:, slots].set(x_new.astype(self.data.dtype))
             return dataclasses.replace(self, data=data)
@@ -243,12 +272,15 @@ class CacheStore(NamedTuple):
                           pos=jnp.asarray(pos, jnp.int32))
 
     def update(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "CacheStore":
+        """Append float [B, T_new, KV, hd] K/V at `pos`; advances pos."""
         T_new = k_new.shape[1]
         return CacheStore(k=self.k.append(k_new, self.pos),
                           v=self.v.append(v_new, self.pos),
                           pos=self.pos + T_new)
 
     def kv(self, dtype=None):
+        """Full dequantized (k, v) planes — prefill/debug fallback only;
+        the decode hot path reads the packed planes (see CachedTensor.read)."""
         return self.k.read(dtype), self.v.read(dtype)
 
 

@@ -5,6 +5,14 @@ head) — for deepseek-v2-lite: 512 + 64 = 576 floats/token vs 4096 for GQA-16,
 a 7.1x cache compression. Decode uses the *absorbed* form: W_uk folds into
 the query and W_uv into the output projection, so attention runs directly in
 the latent space (no per-token decompression).
+
+Cache layouts: the latent planes are CachedTensors, so they store fp or the
+§5.1 packed sparq format (quantize-on-write, tiled fused meta-decode on
+read via `_sparq_mla_decode`). The MLA cache stays on the *contiguous*
+layout and the scan engine — its scores couple two quantized planes, which
+the shared paged GQA kernel does not model; paging the latent cache is a
+possible follow-up (the block-table machinery in models/paging.py is
+layout-agnostic).
 """
 from __future__ import annotations
 

@@ -145,12 +145,15 @@ class Model:
 
     def decode_step(self, params, tokens, caches, pos,
                     ctx: Optional[QuantCtx] = None, scales_groups=None):
-        """One token for every sequence. tokens [B,1]; pos: scalar absolute
-        position. Returns (logits [B,V], caches)."""
+        """One token for every sequence. tokens [B,1]; pos: absolute
+        position of the new token — a scalar (uniform batch, the scan
+        engine) or an int32 [B] vector (ragged continuous batching: every
+        sequence decodes at its own position). Returns (logits [B,V],
+        caches)."""
         cfg = self.cfg
         x = embed_tokens(params["embed"], tokens, cfg.dtype)
         x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
-        positions = jnp.broadcast_to(jnp.asarray(pos)[None, None],
+        positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1),
                                      (x.shape[0], 1))
         x, caches, _ = tr.stack_apply(
             self.groups_meta, params["blocks"], x, cfg, positions=positions, caches=caches,

@@ -1,0 +1,343 @@
+"""Paged SPARQ KV-cache: one global pool of fixed-size packed pages.
+
+The contiguous `CacheStore` gives every sequence `max_len` slots up front,
+so short sequences strand capacity long ones need. `PagedCacheStore`
+instead owns one pool of fixed-size pages per layer, each page holding
+`page_size` slots of the raw §5.1 packed planes — int8 window codes, the
+packed `[mux|shift_hi|shift_lo]` meta byte, and per-*sequence* site scales.
+A sequence's cache is a *block table*: `block_table[s, b]` names the
+physical page that backs logical slots `[b*page_size, (b+1)*page_size)` of
+sequence-slot `s`. Because the fused decode kernel (PR 2) masks by slot
+*position*, not slot order, attention over paged storage is the same
+kernel with a gather: `kernels.ops.sparq_paged_decode_attention` prefetches
+the block table as scalars and streams each sequence's pages straight from
+the pool — the pool stores only packed bytes and a dequantized copy is
+never materialized.
+
+Division of labor:
+
+  PagedCacheStore   device state (pools, scales, block tables, positions);
+                    jit/scan-transparent pytree, one per attention layer
+                    (stacked along layer 0 by the engine). `update()` is
+                    the traced per-token write; attention reads go through
+                    `paged_decode_attention`.
+  PageAllocator     host-side free list. Allocation and eviction are
+                    scheduling decisions, so they live with the engine
+                    (`launch.serve.ContinuousBatchingEngine`) and happen
+                    *between* traced steps; exhaustion raises here, before
+                    any tracing, mirroring the contiguous engine's
+                    host-side capacity check.
+  adopt_prefill /   engine-level transitions: copy a freshly prefill'd
+  evict_slot        contiguous sparq cache's packed planes into pool pages
+                    (no re-quantization — the bytes and the calibrated
+                    scale transfer verbatim), and clear a finished slot.
+
+Pool geometry: every layer's pool has `n_pages` usable pages plus one
+*trash page* at index `n_pages`, the write target for inactive sequence
+slots — their (masked, garbage) decode writes land there instead of
+corrupting live pages, keeping the traced step free of conditionals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparq import SparqConfig
+from repro.models.cache import CacheConfig, CacheStore
+
+
+class PoolExhausted(RuntimeError):
+    """Raised host-side (before tracing) when the page pool runs dry."""
+
+
+class PageAllocator:
+    """Host-side free-list allocator for the shared page pool.
+
+    Page ids are shared across layers: allocating page `p` for a sequence
+    reserves physical page `p` in every layer's pool (the block table is
+    one table, not per-layer). All methods are plain-Python and run between
+    traced steps; `alloc` raises `PoolExhausted` *before* any tracing when
+    the request cannot be satisfied.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages))
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"page pool exhausted: need {n} page(s), {len(self._free)} "
+                f"of {self.n_pages} free — grow --n-pages, shrink the "
+                f"admitted batch, or wait for evictions")
+        pages, self._free = self._free[:n], self._free[n:]
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.n_pages and p not in self._free, p
+        self._free.extend(pages)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("k_data", "k_meta", "v_data", "v_meta",
+                                "k_scale", "v_scale", "block_table",
+                                "seq_pos"),
+                   meta_fields=("codec", "impl"))
+@dataclasses.dataclass
+class PagedCacheStore:
+    """Paged KV cache for one attention layer (sparq layout only).
+
+    Shapes (S = sequence slots, P = n_pages + 1 trash, ps = page_size,
+    NB = max logical blocks per sequence):
+
+      k/v_data, k/v_meta  int8  [P, ps, KV, hd]   packed §5.1 page pools
+      k/v_scale           f32   [S]               per-sequence site scales
+                                                  (0 = uncalibrated; set by
+                                                  adopt_prefill, frozen for
+                                                  decode writes)
+      block_table         int32 [S, NB]           physical page per logical
+                                                  block (-1 = unallocated)
+      seq_pos             int32 [S]               tokens written per slot
+                                                  (-1 = inactive slot)
+    """
+    k_data: jnp.ndarray
+    k_meta: jnp.ndarray
+    v_data: jnp.ndarray
+    v_meta: jnp.ndarray
+    k_scale: jnp.ndarray
+    v_scale: jnp.ndarray
+    block_table: jnp.ndarray
+    seq_pos: jnp.ndarray
+    codec: Optional[SparqConfig] = None
+    impl: str = "auto"
+
+    # -------------------------------------------------------------- init
+    @staticmethod
+    def init(n_seqs: int, n_pages: int, page_size: int, n_blocks: int,
+             kv_heads: int, head_dim: int, cc: CacheConfig
+             ) -> "PagedCacheStore":
+        if cc.layout != "sparq":
+            raise ValueError(
+                "PagedCacheStore stores the packed §5.1 planes; use "
+                "--kv-cache sparq (fp paging would just be fp paging — the "
+                "point of the pool is that the hot loop reads packed bytes)")
+        assert head_dim % 2 == 0, \
+            f"sparq pairs adjacent lanes; head_dim must be even: {head_dim}"
+        shp = (n_pages + 1, page_size, kv_heads, head_dim)  # +1: trash page
+        return PagedCacheStore(
+            k_data=jnp.zeros(shp, jnp.int8),
+            k_meta=jnp.zeros(shp, jnp.int8),
+            v_data=jnp.zeros(shp, jnp.int8),
+            v_meta=jnp.zeros(shp, jnp.int8),
+            k_scale=jnp.zeros((n_seqs,), jnp.float32),
+            v_scale=jnp.zeros((n_seqs,), jnp.float32),
+            block_table=jnp.full((n_seqs, n_blocks), -1, jnp.int32),
+            seq_pos=jnp.full((n_seqs,), -1, jnp.int32),
+            codec=cc.sparq, impl=cc.impl)
+
+    # --------------------------------------------------------- geometry
+    @property
+    def n_seqs(self) -> int:
+        return self.seq_pos.shape[-1]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_data.shape[-3]
+
+    @property
+    def n_pages(self) -> int:        # usable pages (excludes the trash page)
+        return self.k_data.shape[-4] - 1
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_table.shape[-1]
+
+    # ------------------------------------------------------------- write
+    def _resolve_scale(self, stored: jnp.ndarray, x: jnp.ndarray
+                       ) -> jnp.ndarray:
+        """Per-sequence scale: frozen once calibrated (> 0), else set from
+        this write's dynamic range — same policy as CachedTensor, per slot."""
+        dyn = jnp.maximum(
+            jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 2, 3)), 1e-8) \
+            / self.codec.max_val
+        return jnp.where(stored > 0, stored, dyn)
+
+    def _encode(self, x: jnp.ndarray, scale: jnp.ndarray):
+        """float [S, KV, hd] -> (§5.1 window codes, meta bytes), int8.
+
+        Same codec semantics as CachedTensor._encode but with a per-slot
+        scale vector; the reference quantizer is elementwise over leading
+        axes, so codes match the contiguous path's (scalar-scale) codes
+        bit for bit slot-by-slot. Decode writes are S*KV*hd values — noise
+        next to the attention reads, so no Pallas dispatch here.
+        """
+        from repro.kernels import ref as _ref
+        from repro.kernels.ops import sparq_pack
+        cfg = self.codec
+        codes, meta = _ref.ref_sparq_quant(
+            x.astype(jnp.float32), scale[:, None, None],
+            bits=cfg.bits, opts_shifts=cfg.shifts, rounding=cfg.rounding,
+            vsparq=cfg.vsparq, signed=cfg.signed, max_val=cfg.max_val,
+            enabled=cfg.enabled)
+        return sparq_pack(codes, meta), meta
+
+    def update(self, k_new: jnp.ndarray, v_new: jnp.ndarray
+               ) -> "PagedCacheStore":
+        """Write one decode token per sequence slot and advance positions.
+
+        k_new/v_new: float [S, 1, KV, hd]. Slot `s` writes its token at
+        logical position seq_pos[s] — physical page
+        block_table[s, pos // ps], row pos % ps. Inactive slots (seq_pos
+        < 0) and unallocated blocks write to the trash page, so the traced
+        step needs no host-side masking; the engine guarantees active
+        sequences always have their current block allocated.
+        """
+        S, T = k_new.shape[:2]
+        assert T == 1, f"paged decode writes one token per step, got {T}"
+        ps = self.page_size
+        trash = self.k_data.shape[0] - 1
+        pos = self.seq_pos
+        active = pos >= 0
+        eff = jnp.maximum(pos, 0)
+        blk = jnp.minimum(eff // ps, self.n_blocks - 1)
+        page = self.block_table[jnp.arange(S), blk]
+        page = jnp.where(active & (page >= 0), page, trash)
+        off = eff % ps
+
+        k_scale = self._resolve_scale(self.k_scale, k_new)
+        v_scale = self._resolve_scale(self.v_scale, v_new)
+        kd, km = self._encode(k_new[:, 0], k_scale)
+        vd, vm = self._encode(v_new[:, 0], v_scale)
+        return dataclasses.replace(
+            self,
+            k_data=self.k_data.at[page, off].set(kd),
+            k_meta=self.k_meta.at[page, off].set(km),
+            v_data=self.v_data.at[page, off].set(vd),
+            v_meta=self.v_meta.at[page, off].set(vm),
+            k_scale=jnp.where(active, k_scale, self.k_scale),
+            v_scale=jnp.where(active, v_scale, self.v_scale),
+            seq_pos=jnp.where(active, pos + 1, pos))
+
+
+# ----------------------------------------------------------------------
+# attention read path
+# ----------------------------------------------------------------------
+
+def paged_decode_attention(q: jnp.ndarray, store: PagedCacheStore, *,
+                           window: int = 0) -> jnp.ndarray:
+    """Fused flash-decode over the page pool. q [S, 1, H, hd].
+
+    Per-sequence `cur` comes from the store's positions (the token written
+    by the preceding `update`), per-sequence scales from its calibration —
+    one traced call serves slots of ragged lengths. Inactive slots are
+    fully masked and return zeros."""
+    from repro.kernels.ops import sparq_paged_decode_attention
+    out = sparq_paged_decode_attention(
+        q, store.k_data, store.k_meta, store.k_scale,
+        store.v_data, store.v_meta, store.v_scale,
+        store.block_table, store.seq_pos - 1, window=window,
+        impl=store.impl)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# engine-level transitions (operate on the layer-stacked store: every
+# array leaf carries a leading layer axis, scales/pos one per layer)
+# ----------------------------------------------------------------------
+
+def adopt_prefill(store: PagedCacheStore, cs: CacheStore,
+                  slot: jnp.ndarray, pages: jnp.ndarray) -> PagedCacheStore:
+    """Move a prefill'd sequence into the pool at `slot`, backed by `pages`.
+
+    `cs` is the layer-stacked contiguous sparq cache the model's prefill
+    just filled for this one sequence (batch 1, capacity == len(pages) *
+    page_size). Its packed planes are copied page-by-page into the pools
+    and its calibrated per-layer scales become the slot's scales — no
+    re-quantization, so the pool bytes are bit-identical to the contiguous
+    cache's. Rows past the prompt are the contiguous cache's zero
+    initialization; they are masked (position > cur) until decode writes
+    overwrite them, which also makes page *reuse* after eviction exact:
+    adoption rewrites every byte of every page it claims.
+
+    slot: int32 scalar sequence-slot index; pages: int32 [n_blocks_prompt].
+    """
+    nbp = pages.shape[0]
+    L = store.k_data.shape[0]
+    ps = store.k_data.shape[-3]
+
+    def put(pool, plane):        # plane [L, 1, nbp*ps, KV, hd]
+        blocks = plane.reshape(L, nbp, ps, *plane.shape[3:])
+        return pool.at[:, pages].set(blocks)
+
+    bt_row = jnp.full((store.block_table.shape[-1],), -1,
+                      jnp.int32).at[:nbp].set(pages)
+    return dataclasses.replace(
+        store,
+        k_data=put(store.k_data, cs.k.data),
+        k_meta=put(store.k_meta, cs.k.meta),
+        v_data=put(store.v_data, cs.v.data),
+        v_meta=put(store.v_meta, cs.v.meta),
+        k_scale=store.k_scale.at[:, slot].set(cs.k.scale),
+        v_scale=store.v_scale.at[:, slot].set(cs.v.scale),
+        block_table=store.block_table.at[:, slot].set(bt_row),
+        seq_pos=store.seq_pos.at[:, slot].set(cs.pos))
+
+
+def evict_slot(store: PagedCacheStore, slot: jnp.ndarray) -> PagedCacheStore:
+    """Clear a finished sequence slot (layer-stacked store).
+
+    Drops the block-table row, deactivates the position, and zeroes the
+    scales so the next occupant recalibrates. The pages themselves are
+    returned to the free list by the engine (host side); their stale bytes
+    are fully overwritten on next adoption."""
+    return dataclasses.replace(
+        store,
+        block_table=store.block_table.at[:, slot].set(-1),
+        seq_pos=store.seq_pos.at[:, slot].set(-1),
+        k_scale=store.k_scale.at[:, slot].set(0.0),
+        v_scale=store.v_scale.at[:, slot].set(0.0))
+
+
+# ----------------------------------------------------------------------
+# footprint accounting
+# ----------------------------------------------------------------------
+
+def modeled_pool_bytes(stores) -> dict:
+    """Model the §5.1 HBM residency of the page pools.
+
+    Walks a pytree of PagedCacheStore (stacked or not); the packed pools
+    are charged the `kernels.ops` data/ctrl figures (one meta plane models
+    the ShiftCtrl side-band + MuxCtrl already folded into the data-plane
+    figure, so we charge values once), bookkeeping arrays (block tables,
+    positions, scales) at their actual dtype sizes."""
+    from repro.kernels.ops import ctrl_bytes_per_value, data_bytes_per_value
+    tally = {"data_bytes": 0.0, "ctrl_bytes": 0.0, "values": 0,
+             "other_bytes": 0.0}
+
+    def visit(st):
+        n = st.k_data.size + st.v_data.size
+        tally["data_bytes"] += n * data_bytes_per_value(st.codec)
+        tally["ctrl_bytes"] += n * ctrl_bytes_per_value(st.codec)
+        tally["values"] += n
+        for extra in (st.k_scale, st.v_scale, st.block_table, st.seq_pos):
+            tally["other_bytes"] += extra.size * extra.dtype.itemsize
+        return st
+
+    jax.tree.map(visit, stores,
+                 is_leaf=lambda n: isinstance(n, PagedCacheStore))
+    tally["total_bytes"] = (tally["data_bytes"] + tally["ctrl_bytes"] +
+                            tally["other_bytes"])
+    return tally

@@ -70,7 +70,7 @@ def ring_decode_attention(q, cache: RingKVCache, window: int):
             q, cache.k.data, cache.k.meta, cache.k.scale,
             cache.v.data, cache.v.meta, cache.v.scale,
             cache.slot_pos, cache.pos - 1, window=window,
-            impl=cache.k.impl)
+            impl=cache.k.impl, bk=cache.k.bk)
         return out.astype(q.dtype)
     B, _, H, hd = q.shape
     k, v = cache.k.read(), cache.v.read()
