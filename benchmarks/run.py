@@ -4,9 +4,12 @@
 
 Output rows: table,config,metric,value. The decode_cache scenario also
 writes BENCH_decode.json (decode tok/s + modeled cache bytes per KV-cache
-layout) and paged_serving writes BENCH_paged.json (paged vs contiguous
+layout), paged_serving writes BENCH_paged.json (paged vs contiguous
 engine tok/s + pool utilization under a ragged continuous-batching
-workload) so the serving-perf trajectory accumulates across PRs.
+workload), and oversubscribed_serving writes BENCH_preempt.json (tok/s +
+preemption counts + swap traffic as the pool shrinks below the working
+set, under both preemption policies) so the serving-perf trajectory
+accumulates across PRs.
 """
 from __future__ import annotations
 
@@ -56,6 +59,33 @@ def decode_cache_rows(out_json: str = "BENCH_decode.json",
     return rows
 
 
+def _ragged_workload():
+    """The shared ragged continuous-batching workload: reduced tiny LM +
+    8 requests whose summed lengths exceed the shared pool. Used by both
+    paged_serving (BENCH_paged.json) and oversubscribed_serving
+    (BENCH_preempt.json) so the two tables stay comparable across PRs.
+    Returns (model, params, requests, lens, gens, page_size, slots,
+    full_pool_pages)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import get_reduced_config
+    from repro.launch import serve as serve_mod
+    from repro.models.model import Model
+
+    cfg_m = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False)
+    model = Model(cfg_m)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lens = [48, 16, 64, 24, 40, 16, 56, 32]
+    gens = [16, 32, 8, 24, 16, 28, 12, 20]
+    reqs = [serve_mod.Request(rng.integers(0, cfg_m.vocab_size, (L,)), g)
+            for L, g in zip(lens, gens)]
+    return model, params, reqs, lens, gens, 16, 4, 22
+
+
 def paged_serving_rows(out_json: str = "BENCH_paged.json",
                        impls: tuple = ("reference",)) -> list:
     """Paged continuous-batching benchmark -> BENCH_paged.json.
@@ -73,8 +103,6 @@ def paged_serving_rows(out_json: str = "BENCH_paged.json",
     allocation for the same concurrency — short sequences no longer strand
     the capacity long ones need; eviction recycles pages mid-run.
     """
-    import numpy as np
-
     from repro.launch import serve as serve_mod
     rows, blob = [], {}
 
@@ -102,23 +130,9 @@ def paged_serving_rows(out_json: str = "BENCH_paged.json",
     # ragged continuous batching: more requests than slots, multi-page
     # sequences, pool smaller than both the summed lengths and the
     # contiguous allocation at equal concurrency
-    import jax
-    import jax.numpy as jnp
-
-    from repro.configs.base import get_reduced_config
     from repro.core.sparq import SparqConfig
     from repro.models.cache import CacheConfig
-    from repro.models.model import Model
-    cfg_m = get_reduced_config("tinyllama-1.1b").replace(
-        dtype=jnp.float32, remat=False)
-    model = Model(cfg_m)
-    params = model.init_params(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    lens = [48, 16, 64, 24, 40, 16, 56, 32]
-    gens = [16, 32, 8, 24, 16, 28, 12, 20]
-    reqs = [serve_mod.Request(rng.integers(0, cfg_m.vocab_size, (L,)), g)
-            for L, g in zip(lens, gens)]
-    ps, n_pages, S = 16, 22, 4
+    model, params, reqs, lens, gens, ps, S, n_pages = _ragged_workload()
     ragged_impl = impls[0]      # one impl for the ragged run (recorded)
     engine = serve_mod.ContinuousBatchingEngine(
         model, CacheConfig.sparq_cache(SparqConfig.opt5(signed=True),
@@ -149,11 +163,83 @@ def paged_serving_rows(out_json: str = "BENCH_paged.json",
     return rows
 
 
+def oversubscribed_serving_rows(out_json: str = "BENCH_preempt.json",
+                                impls: tuple = ("reference",)) -> list:
+    """Oversubscribed paged serving -> BENCH_preempt.json.
+
+    The ragged continuous-batching workload is replayed through page
+    pools swept from comfortable down to heavily oversubscribed, under
+    both preemption policies. Per (pool, policy): steady-state decode
+    tok/s, preemption/resume counts, requeue replay steps (recompute
+    cost), and swap traffic (host-bandwidth cost — packed §5.1 bytes at
+    0.9375 B/value modeled, ~4.3x less than swapping fp32 planes). Every
+    oversubscribed run's
+    greedy tokens are asserted identical to the uncontended run: the
+    benchmark measures the *cost* of preemption, exactness is a given.
+    """
+    import numpy as np
+
+    from repro.core.sparq import SparqConfig
+    from repro.launch import serve as serve_mod
+    from repro.models.cache import CacheConfig
+
+    model, params, reqs, lens, gens, ps, S, full_pool = _ragged_workload()
+    impl = impls[0]
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True), impl=impl)
+
+    def engine(n_pages, policy):
+        return serve_mod.ContinuousBatchingEngine(
+            model, cc, page_size=ps, n_pages=n_pages, max_active=S,
+            max_seq_len=80, policy=policy)
+
+    base = engine(full_pool, None)
+    base.run(params, reqs)                      # compile pass, untimed
+    oracle, stats0 = base.run(params, reqs)
+    rows, blob = [], {"impl": impl, "requests": len(reqs),
+                      "page_size": ps, "active_slots": S}
+    blob["uncontended"] = {
+        "pool_pages": full_pool,
+        "decode_tok_s": round(stats0["decode_tok_s"], 2),
+        "peak_pages_used": stats0["peak_pages_used"],
+    }
+    for n_pages in (10, 7, 5):                  # ~0.45x / 0.32x / 0.23x
+        for mode in ("requeue", "swap"):
+            policy = serve_mod.SchedulerPolicy(preempt=mode,
+                                               victim="last_joined")
+            eng = engine(n_pages, policy)
+            eng.run(params, reqs)               # compile pass, untimed
+            results, stats = eng.run(params, reqs)
+            for rid in oracle:                  # exactness is a given
+                np.testing.assert_array_equal(results[rid], oracle[rid])
+            tag = f"pool{n_pages}_{mode}"
+            blob[tag] = {
+                "pool_pages": n_pages,
+                "policy": mode,
+                "decode_tok_s": round(stats["decode_tok_s"], 2),
+                "preemptions": stats["preemptions"],
+                "resumes": stats["resumes"],
+                "replay_steps": stats["replay_steps"],
+                "resume_s": round(stats["resume_s"], 4),
+                "swap_bytes_out": stats["swap_bytes_out"],
+                "swap_peak_bytes": stats["swap_peak_bytes"],
+                "peak_pages_used": stats["peak_pages_used"],
+            }
+            cfg_name = f"tinyllama_reduced_{tag}"
+            rows += [(cfg_name, "decode_tok_s",
+                      blob[tag]["decode_tok_s"]),
+                     (cfg_name, "preemptions", stats["preemptions"]),
+                     (cfg_name, "swap_bytes_out", stats["swap_bytes_out"])]
+    with open(out_json, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_json}", file=sys.stderr)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
                     default="1,2,3,4,5,6,stats,serve,decode_cache,"
-                            "paged_serving")
+                            "paged_serving,oversubscribed_serving")
     ap.add_argument("--decode-impls", default="reference,pallas",
                     help="fused-decode impls to sweep in decode_cache "
                          "(pallas runs in interpret mode off-TPU: exact "
@@ -205,6 +291,10 @@ def main() -> None:
     if "paged_serving" in want:
         # paged vs contiguous engines + ragged continuous batching
         common.emit("paged_serving", paged_serving_rows(
+            impls=tuple(args.decode_impls.split(","))))
+    if "oversubscribed_serving" in want:
+        # preemption cost sweep: pool size x policy -> BENCH_preempt.json
+        common.emit("oversubscribed_serving", oversubscribed_serving_rows(
             impls=tuple(args.decode_impls.split(","))))
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 

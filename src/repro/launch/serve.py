@@ -16,7 +16,11 @@ Two engines share the model and the fused packed-cache decode kernels:
       admission (prefill + page adoption), page allocation on write, and
       page free on eviction happen *between* steps; the inner decode step
       stays a single traced function over all sequence slots, reading
-      pages through the block-table variant of the fused kernel.
+      pages through the block-table variant of the fused kernel. With a
+      `SchedulerPolicy` (`--preempt requeue|swap`) the pool may be
+      oversubscribed: decode-time exhaustion preempts victim sequences
+      (requeue-and-replay, or packed-page swap to a host `SwapStore`) and
+      resumes them bit-exactly ahead of new admissions.
 
 `--kv-cache {fp32,bf16,sparq}` selects the cache layout (the paged engine
 requires sparq — packed pages are its point); `--impl` picks the kernel
@@ -209,14 +213,52 @@ class Request:
     """One generation request: a prompt and a total token budget.
 
     `gen` counts like DecodeEngine's: total greedy tokens to return,
-    including the one the prefill emits."""
+    including the one the prefill emits. `arrive_at` delays admission
+    until that many decode steps have executed (0 = available at start) —
+    arrival traces for the scheduler test harness and open-loop
+    benchmarks; it changes *when* a request is served, never its tokens."""
     tokens: np.ndarray          # [L] int prompt token ids
     gen: int
+    arrive_at: int = 0          # decode-step index at which it arrives
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens)
         assert self.tokens.ndim == 1 and self.tokens.size >= 1
         assert self.gen >= 1
+        assert self.arrive_at >= 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    """What to do when decode-time page allocation finds the pool dry.
+
+    preempt  "requeue": drop the victim's pages and rebuild its cache
+             later by re-running prefill plus a teacher-forced replay of
+             its already-emitted tokens through the decode path — zero
+             host traffic, recompute cost on resume. Exact because both
+             passes are the deterministic programs that produced the
+             original bytes.
+             "swap": copy the victim's packed pages verbatim to a host
+             SwapStore (§5.1 bytes: 0.9375 B/value modeled, ~4.3x less
+             traffic than fp32 planes) and scatter them back when pages
+             free up — no recompute, host bandwidth cost. Bit-exact by
+             construction.
+    victim   "last_joined": preempt the most recently admitted sequence
+             first (oldest work is closest to completion).
+             "fewest_pages": preempt the sequence owning the fewest pages
+             (cheapest to rebuild/swap); ties broken last-joined-first.
+
+    Either way resumed sequences take strict priority over new admissions
+    (resume-before-admit), so preempted work cannot starve.
+    """
+    preempt: str = "requeue"        # requeue | swap
+    victim: str = "last_joined"     # last_joined | fewest_pages
+
+    def __post_init__(self):
+        if self.preempt not in ("requeue", "swap"):
+            raise ValueError(f"unknown preempt mode {self.preempt!r}")
+        if self.victim not in ("last_joined", "fewest_pages"):
+            raise ValueError(f"unknown victim rule {self.victim!r}")
 
 
 @dataclasses.dataclass
@@ -226,6 +268,16 @@ class _Slot:
     target: int                 # total tokens to emit (== Request.gen)
     generated: int              # tokens emitted so far (tok0 counts)
     pages: List[int]            # physical pages owned by this sequence
+    joined: int = 0             # admission sequence number (victim order)
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """A preempted request waiting on the resume queue."""
+    rid: int
+    req: Request
+    toks: List[int]             # greedy tokens emitted before preemption
+    swapped: bool               # True: packed pages parked in the SwapStore
 
 
 class ContinuousBatchingEngine:
@@ -240,9 +292,19 @@ class ContinuousBatchingEngine:
     Every decode step is one jitted call over all S slots (inactive slots
     are masked inside the kernel); between steps the host only does
     scheduling: evict finished sequences (pages back to the free list),
-    admit from the queue, and allocate a page when a sequence's next token
-    crosses into an unallocated block. Pool exhaustion raises host-side,
-    before any tracing.
+    resume preempted sequences then admit from the queue, and allocate a
+    page when a sequence's next token crosses into an unallocated block.
+
+    With `policy=None` decode-time pool exhaustion raises `PoolExhausted`
+    host-side, before any tracing. With a `SchedulerPolicy` the pool may
+    be *oversubscribed*: exhaustion instead preempts victim sequences —
+    requeueing them (drop pages, rebuild by prefill + teacher-forced
+    replay on resume) or swapping their packed pages to a host
+    `SwapStore` — and resumes them bit-exactly, ahead of new admissions,
+    once pages free up. Greedy tokens are identical with and without
+    preemption (tested for the int8 grid and the 4-bit 5opt codec under
+    both policies); `PoolExhausted` then only fires when no victim
+    remains to preempt.
 
     Restrictions: standard-KV attention families only (dense / MoE-GQA);
     MLA latent caches, recurrent state, and encoder-decoder cross caches
@@ -252,7 +314,8 @@ class ContinuousBatchingEngine:
     def __init__(self, model: Model, cache_cfg: CacheConfig,
                  ctx: Optional[QuantCtx] = None, scales_groups=None, *,
                  page_size: int = 16, n_pages: int = 64,
-                 max_active: int = 4, max_seq_len: int = 512):
+                 max_active: int = 4, max_seq_len: int = 512,
+                 policy: Optional[SchedulerPolicy] = None):
         if cache_cfg.layout != "sparq":
             raise ValueError("the paged engine stores packed §5.1 pages; "
                              "use --kv-cache sparq")
@@ -273,7 +336,15 @@ class ContinuousBatchingEngine:
         self.n_pages = n_pages
         self.max_active = max_active
         self.n_blocks = max_seq_len // page_size
+        self.policy = policy
+        # requeue resume replays decode steps through a temporary
+        # *contiguous* cache; pinning its fused-kernel tile to the page
+        # size makes the replay reads bit-identical to the paged reads
+        # that produced the original tokens (one page == one Tk tile)
+        self._cc_replay = dataclasses.replace(cache_cfg, attn_bk=page_size)
+        self._debug_state: dict = {}     # last run's allocator/slots (tests)
         self._prefill = jax.jit(self._prefill_fn)
+        self._replay = jax.jit(self._replay_fn)
         # donate the cache buffers: the pools are the dominant state and
         # every step rewrites them in place — without donation XLA would
         # copy all packed planes each token, doubling the traffic the
@@ -284,6 +355,11 @@ class ContinuousBatchingEngine:
         self._step = jax.jit(self._step_fn, donate_argnums=(2,))
         self._adopt = jax.jit(paging.adopt_prefill, donate_argnums=(0,))
         self._evict = jax.jit(paging.evict_slot, donate_argnums=(0,))
+        # swap-out gathers copy out of the pool (no donation); swap-in
+        # scatters rewrite it in place (donated like adoption)
+        self._gather = jax.jit(paging.gather_slot_pages)
+        self._restore = jax.jit(paging.restore_slot_pages,
+                                donate_argnums=(0,))
 
     # ------------------------------------------------------------ traced
     def _prefill_fn(self, params, batch, caches):
@@ -298,6 +374,25 @@ class ContinuousBatchingEngine:
             scales_groups=self.scales_groups)
         return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), caches
 
+    def _replay_fn(self, params, toks, caches, pos0):
+        """Teacher-forced decode replay for requeue resume: feed the
+        recorded greedy tokens `toks` [1, n] through the contiguous decode
+        path, writing their K/V at positions pos0..pos0+n-1. The logits
+        are discarded (the tokens are already known), so XLA drops the
+        head matmul; what remains is exactly the cache-write path that
+        produced the original bytes — replayed bytes are bit-identical."""
+        def step(carry, tok_t):
+            caches, pos = carry
+            _, caches = self.model.decode_step(
+                params, tok_t[:, None], caches, pos, ctx=self.ctx,
+                scales_groups=self.scales_groups)
+            return (caches, pos + 1), ()
+
+        (caches, _), _ = jax.lax.scan(
+            step, (caches, jnp.asarray(pos0, jnp.int32)),
+            toks.swapaxes(0, 1))
+        return caches
+
     # ------------------------------------------------------------ device
     def _init_stores(self) -> list:
         cfg = self.model.cfg
@@ -311,15 +406,49 @@ class ContinuousBatchingEngine:
                 one))
         return stores
 
+    # ------------------------------------------------------------ trace
+    @staticmethod
+    def _snapshot(n_steps, allocator, slots, host_bt, host_pos, caches,
+                  queue, resume_q, swap) -> dict:
+        """Scheduler-state snapshot handed to `run(trace_hook=...)` before
+        each traced decode step. Host fields are copies (safe to keep);
+        `caches` is the live device state for deep cross-checks."""
+        return {
+            "step": n_steps,
+            "n_pages": allocator.n_pages,
+            "free_pages": allocator.free_pages,
+            "peak_pages": allocator.peak_used,
+            "slots": {s: {"rid": st.rid, "pages": list(st.pages),
+                          "pos": int(host_pos[s]),
+                          "generated": st.generated, "target": st.target,
+                          "joined": st.joined}
+                      for s, st in enumerate(slots) if st is not None},
+            "host_bt": host_bt.copy(),
+            "queued": [rid for rid, _ in queue],
+            "resume_rids": [rec.rid for rec in resume_q],
+            "swapped_rids": sorted(
+                rec.rid for rec in resume_q if rec.swapped),
+            "swap_resident_bytes": swap.resident_bytes,
+            "caches": caches,
+        }
+
     # ------------------------------------------------------------ public
     def run(self, params, requests: Sequence[Request],
-            progress: bool = False) -> Tuple[Dict[int, np.ndarray], dict]:
+            progress: bool = False, trace_hook=None
+            ) -> Tuple[Dict[int, np.ndarray], dict]:
         """Serve every request to completion; greedy tokens per request.
 
         Returns ({request_index: int32 [gen] tokens}, stats). Each run
         starts from a fresh pool and fresh (uncalibrated) scales, so a run
         is reproducible and re-entrant; jitted programs are reused across
         runs (call once to warm up, again to time steady state).
+
+        `trace_hook`, if given, is called with a scheduler-state snapshot
+        dict immediately before every traced decode step (see `_snapshot`)
+        — the randomized-trace test harness asserts per-step invariants
+        there. Page accounting invariants (free-list conservation, no
+        double-use, block-table/position consistency) are additionally
+        asserted internally every iteration regardless of the hook.
         """
         requests = [r if isinstance(r, Request) else Request(*r)
                     for r in requests]
@@ -340,35 +469,226 @@ class ContinuousBatchingEngine:
         slots: List[Optional[_Slot]] = [None] * S
         host_bt = np.full((S, NB), -1, np.int64)
         host_pos = np.full((S,), -1, np.int64)
-        queue = list(enumerate(requests))
+        # admission order: arrival time, then request index (FIFO)
+        queue = sorted(enumerate(requests),
+                       key=lambda kv: (kv[1].arrive_at, kv[0]))
+        resume_q: List[_Preempted] = []
+        swap = paging.SwapStore()
         first_tok: Dict[int, jnp.ndarray] = {}
         history: List[Tuple[tuple, jnp.ndarray]] = []
+        counters = {"preemptions": 0, "preempt_requeue": 0,
+                    "preempt_swap": 0, "resumes": 0, "replay_steps": 0}
+        join_seq = 0
         peak_pages = 0
         t_prefill = 0.0
-        n_steps = 0
+        t_resume = 0.0
+        n_steps = 0                 # decode steps actually executed
+        clock = 0                   # arrival time: n_steps + idle skips
+        # expose the live scheduling state for post-mortem tests: after a
+        # PoolExhausted escapes, page accounting must still be consistent
+        self._debug_state = {"allocator": allocator, "slots": slots,
+                             "swap": swap}
+
+        # ---------------- preemption machinery (closures over run state)
+        def emitted_toks(rid: int) -> List[int]:
+            """Host copies of every greedy token rid has emitted, in
+            order, across all of its slot residencies — one batched
+            device fetch per call (preemptions are rare; per-step
+            fetches would sync the decode pipeline every token)."""
+            out = [int(np.asarray(first_tok[rid]))]
+            hits = [(i, s_h) for i, (act, _) in enumerate(history)
+                    for s_h, r in act if r == rid]
+            if hits:
+                toks_np = np.asarray(
+                    jnp.concatenate([t for _, t in history], axis=1))
+                out.extend(int(toks_np[s_h, i]) for i, s_h in hits)
+            return out
+
+        def evict(s: int):
+            """Return a slot's pages to the free list and clear it."""
+            nonlocal caches
+            allocator.free(slots[s].pages)
+            caches = [self._evict(c, jnp.int32(s)) for c in caches]
+            host_bt[s] = -1
+            host_pos[s] = -1
+            slots[s] = None
+
+        def finished_slot() -> Optional[int]:
+            return next((s for s, st in enumerate(slots)
+                         if st is not None and st.generated >= st.target),
+                        None)
+
+        def select_victim(exclude=()):
+            cands = [(s, st) for s, st in enumerate(slots)
+                     if st is not None and s not in exclude]
+            if not cands or self.policy is None:
+                return None
+            if self.policy.victim == "fewest_pages":
+                key = lambda c: (len(c[1].pages), -c[1].joined)
+            else:                               # last_joined
+                key = lambda c: (-c[1].joined,)
+            return min(cands, key=key)[0]
+
+        def preempt(s: int):
+            nonlocal caches
+            st = slots[s]
+            toks = emitted_toks(st.rid)
+            assert len(toks) == st.generated, (st.rid, len(toks))
+            rec = _Preempted(rid=st.rid, req=requests[st.rid], toks=toks,
+                             swapped=self.policy.preempt == "swap")
+            if rec.swapped:
+                pages_dev = jnp.asarray(st.pages, jnp.int32)
+                planes = [self._gather(c, jnp.int32(s), pages_dev)
+                          for c in caches]
+                swap.put(st.rid, planes, int(host_pos[s]))
+            caches = [self._evict(c, jnp.int32(s)) for c in caches]
+            allocator.free(st.pages)
+            host_bt[s] = -1
+            host_pos[s] = -1
+            slots[s] = None
+            resume_q.append(rec)
+            counters["preemptions"] += 1
+            counters["preempt_swap" if rec.swapped
+                     else "preempt_requeue"] += 1
+            if progress:
+                how = "swap" if rec.swapped else "requeue"
+                print(f"[preempt] rid={st.rid} slot={s} mode={how} "
+                      f"done={st.generated}/{st.target}")
+
+        def bind_slot(s: int, rid: int, req: Request, pages: List[int],
+                      pos: int, generated: int, last_tok):
+            nonlocal tok, join_seq
+            tok = tok.at[s, 0].set(last_tok)
+            slots[s] = _Slot(rid=rid, target=req.gen, generated=generated,
+                             pages=list(pages), joined=join_seq)
+            join_seq += 1
+            host_bt[s] = -1
+            host_bt[s, :len(pages)] = pages
+            host_pos[s] = pos
+
+        def resume(s: int, rec: _Preempted):
+            """Rebuild a preempted sequence in slot s. Caller guarantees
+            the allocator holds enough pages (incl. the growth page when
+            pos sits on a block boundary)."""
+            nonlocal caches, t_resume
+            t0 = time.time()
+            counters["resumes"] += 1
+            if rec.swapped:
+                nbp = swap.n_pages(rec.rid)
+                pages = allocator.alloc(nbp)
+                planes_np, pos = swap.pop(rec.rid)
+                pages_dev = jnp.asarray(pages, jnp.int32)
+                caches = [self._restore(
+                    c, {k: jnp.asarray(v) for k, v in pl.items()},
+                    jnp.int32(s), pages_dev, jnp.int32(pos))
+                    for c, pl in zip(caches, planes_np)]
+                jax.block_until_ready(caches[0].seq_pos)
+            else:                               # requeue: recompute
+                L, done = len(rec.req.tokens), len(rec.toks)
+                pos = L + done - 1
+                nbp = math.ceil(pos / ps)
+                pages = allocator.alloc(nbp)
+                tmp = self.model.init_cache(1, nbp * ps,
+                                            cache_cfg=self._cc_replay)
+                tok0, tmp = self._prefill(
+                    params, {"tokens": jnp.asarray(rec.req.tokens)[None]},
+                    tmp)
+                assert int(np.asarray(tok0[0, 0])) == rec.toks[0], \
+                    "requeue replay diverged at prefill — greedy decode " \
+                    "is no longer deterministic"
+                if done > 1:
+                    tmp = self._replay(
+                        params, jnp.asarray(rec.toks[:-1], jnp.int32)[None],
+                        tmp, jnp.int32(L))
+                    counters["replay_steps"] += done - 1
+                pages_dev = jnp.asarray(pages, jnp.int32)
+                caches = [self._adopt(c, t_g, jnp.int32(s), pages_dev)
+                          for c, t_g in zip(caches, tmp)]
+            bind_slot(s, rec.rid, rec.req, pages, pos,
+                      generated=len(rec.toks), last_tok=rec.toks[-1])
+            t_resume += time.time() - t0
+            if progress:
+                print(f"[resume] rid={rec.rid} slot={s} pos={pos} "
+                      f"pages={pages}")
+
+        def growth_debt() -> int:
+            """Pages the *running* sequences need before the next step —
+            the admission watermark. Joining may not drain the free list
+            below this debt: a resume or admission that stole a running
+            sequence's growth page would force a preemption in the very
+            same iteration (and, worst case, thrash the sequence that
+            just resumed)."""
+            debt = 0
+            for s in range(S):
+                st = slots[s]
+                if st is None or st.generated >= st.target:
+                    continue
+                if host_bt[s, host_pos[s] // ps] < 0:
+                    debt += 1
+            return debt
+
+        def resume_need(rec: _Preempted) -> int:
+            """Pages a resume must find free: the restored pages plus the
+            growth page when the next write crosses into a new block —
+            reserving it up front keeps a fresh resume from being
+            immediately re-preempted by its own growth."""
+            if rec.swapped:
+                nbp, pos = swap.n_pages(rec.rid), swap.pos(rec.rid)
+            else:
+                pos = len(rec.req.tokens) + len(rec.toks) - 1
+                nbp = math.ceil(pos / ps)
+            return nbp + (1 if pos // ps >= nbp else 0)
+
+        def check_page_accounting():
+            owned = [p for st in slots if st is not None for p in st.pages]
+            assert len(owned) == len(set(owned)), \
+                "page double-use across sequence slots"
+            assert allocator.free_count + len(owned) == self.n_pages, \
+                "free-list conservation violated (pages leaked)"
+            allocator.assert_consistent()
+            for s, st in enumerate(slots):
+                if st is None:
+                    continue
+                row = host_bt[s][host_bt[s] >= 0]
+                assert list(row) == st.pages, \
+                    f"slot {s}: block table disagrees with owned pages"
+                assert 0 <= host_pos[s] <= len(st.pages) * ps, \
+                    f"slot {s}: position outside its allocated blocks"
 
         t_run0 = time.time()
         while True:
             # ---- evict finished sequences: pages back to the free list
-            for s in range(S):
-                st = slots[s]
-                if st is not None and st.generated >= st.target:
-                    allocator.free(st.pages)
-                    caches = [self._evict(c, jnp.int32(s)) for c in caches]
-                    host_bt[s] = -1
-                    host_pos[s] = -1
-                    slots[s] = None
+            while (fin := finished_slot()) is not None:
+                evict(fin)
 
-            # ---- admit from the queue into free slots
-            while queue and None in slots:
+            # ---- resume preempted sequences, then admit new arrivals.
+            # Strict resume-before-admit: while a preempted sequence
+            # waits, nothing younger is admitted past it.
+            def arrived():
+                return queue and queue[0][1].arrive_at <= clock
+
+            while None in slots and (resume_q or arrived()):
+                s = slots.index(None)
+                if resume_q:
+                    rec = resume_q[0]
+                    if allocator.free_count < resume_need(rec) \
+                            + growth_debt():
+                        break                   # wait for evictions
+                    resume_q.pop(0)
+                    resume(s, rec)
+                    continue
                 rid, req = queue[0]
-                nbp = math.ceil(len(req.tokens) / ps)
-                if allocator.free_count < nbp:
+                L = len(req.tokens)
+                nbp = math.ceil(L / ps)
+                # watermark: prompt pages, plus this request's own first
+                # growth page when its prompt ends on a block boundary,
+                # plus the running sequences' growth debt
+                own = 1 if (req.gen > 1 and L % ps == 0) else 0
+                if allocator.free_count < nbp + own + growth_debt():
                     if not any(slots):
-                        allocator.alloc(nbp)    # raises PoolExhausted
+                        allocator.alloc(nbp + own)  # raises PoolExhausted
                     break                       # wait for evictions
                 queue.pop(0)
-                s = slots.index(None)
                 t0 = time.time()
                 pages = allocator.alloc(nbp)
                 tmp = self.model.init_cache(1, nbp * ps, cache_cfg=self.cc)
@@ -377,12 +697,9 @@ class ContinuousBatchingEngine:
                 pages_dev = jnp.asarray(pages, jnp.int32)
                 caches = [self._adopt(c, t_g, jnp.int32(s), pages_dev)
                           for c, t_g in zip(caches, tmp)]
-                tok = tok.at[s].set(tok0[0])
                 first_tok[rid] = tok0[0, 0]
-                slots[s] = _Slot(rid=rid, target=req.gen, generated=1,
-                                 pages=pages)
-                host_bt[s, :nbp] = pages
-                host_pos[s] = len(req.tokens)
+                bind_slot(s, rid, req, pages, pos=len(req.tokens),
+                          generated=1, last_tok=tok0[0, 0])
                 # drain the async prefill dispatch before reading the
                 # clock, so its device time lands in t_prefill rather
                 # than decode_s (the contiguous engine blocks the same
@@ -392,27 +709,61 @@ class ContinuousBatchingEngine:
                 # are small and stay with decode_s.
                 jax.block_until_ready(tok0)
                 t_prefill += time.time() - t0
-                peak_pages = max(peak_pages, allocator.used_count)
                 if progress:
                     print(f"[admit] rid={rid} slot={s} prompt="
                           f"{len(req.tokens)} pages={pages}")
+            peak_pages = max(peak_pages, allocator.used_count)
 
             if not any(slots):
+                if resume_q or arrived():
+                    continue                    # a resume/admit now fits
+                if queue:                       # idle until next arrival
+                    clock = queue[0][1].arrive_at
+                    continue
                 break                           # drained
 
             # ---- allocate the page the next token will be written into
-            # (skip slots that already hit their target: they are evicted
-            # at the top of the next iteration and must not grab pages)
+            # (finished slots were evicted above and never reach here).
+            # Allocation is transactional per page: a page leaves the
+            # free list only together with its slot-ownership record, so
+            # a PoolExhausted mid-step (no victim left) cannot strand
+            # pages — asserted by check_page_accounting every iteration.
             dirty = False
             for s in range(S):
                 if slots[s] is None or slots[s].generated >= slots[s].target:
                     continue
                 blk = host_pos[s] // ps
-                if host_bt[s, blk] < 0:
-                    (pg,) = allocator.alloc(1)  # raises PoolExhausted
-                    slots[s].pages.append(pg)
-                    host_bt[s, blk] = pg
+                if host_bt[s, blk] >= 0:
+                    continue
+                while allocator.free_count < 1:
+                    # a finished slot is a free win: evict it instead of
+                    # paying a swap round trip / replay for work that
+                    # will emit nothing. (The admission watermark keeps
+                    # this branch from triggering today — admissions may
+                    # not drain the pool below the growth debt — but the
+                    # ordering "reclaim finished, then preempt" is a
+                    # liveness guarantee, not an optimization.)
+                    fin = finished_slot()
+                    if fin is not None:
+                        evict(fin)
+                        dirty = True
+                        continue
+                    victim = select_victim(exclude=(s,))
+                    if victim is None:
+                        check_page_accounting()
+                        raise paging.PoolExhausted(
+                            f"page pool exhausted growing slot {s} and no "
+                            f"victim left to preempt — grow --n-pages or "
+                            f"enable --preempt requeue|swap"
+                            if self.policy is None else
+                            f"page pool exhausted growing slot {s}: every "
+                            f"other sequence is already preempted")
+                    preempt(victim)
                     dirty = True
+                (pg,) = allocator.alloc(1)
+                slots[s].pages.append(pg)
+                host_bt[s, blk] = pg
+                dirty = True
             peak_pages = max(peak_pages, allocator.used_count)
             if dirty:
                 bt_dev = jnp.asarray(host_bt, jnp.int32)
@@ -420,6 +771,7 @@ class ContinuousBatchingEngine:
                     c, block_table=jnp.broadcast_to(
                         bt_dev, c.block_table.shape))
                     for c in caches]
+            check_page_accounting()
 
             # ---- one traced decode step over every slot. Slots that just
             # hit their target still ride along (their masked write lands
@@ -429,9 +781,14 @@ class ContinuousBatchingEngine:
                            and slots[s].generated < slots[s].target)
             if not active:
                 continue                        # every slot done: evict
+            if trace_hook is not None:
+                trace_hook(self._snapshot(
+                    n_steps, allocator, slots, host_bt, host_pos, caches,
+                    queue, resume_q, swap))
             pos_dev = caches[0].seq_pos[0]      # [S]; host_pos for active
             tok, caches = self._step(params, tok, caches, pos_dev)
             n_steps += 1
+            clock += 1
             history.append((active, tok))
             for s, _ in active:
                 slots[s].generated += 1
@@ -454,12 +811,13 @@ class ContinuousBatchingEngine:
         for rid, req in enumerate(requests):
             assert len(results[rid]) == req.gen, (rid, len(results[rid]))
 
-        decode_s = max(t_total - t_prefill, 1e-9)
+        decode_s = max(t_total - t_prefill - t_resume, 1e-9)
         decode_tokens = sum(len(a) for a, _ in history)
         pool_slots = self.n_pages * ps
         total_tokens = sum(len(r.tokens) + r.gen - 1 for r in requests)
         stats = {
             "prefill_s": t_prefill,
+            "resume_s": t_resume,
             "decode_s": decode_s,
             "decode_steps": n_steps,
             "decode_tok_s": decode_tokens / decode_s,
@@ -469,6 +827,14 @@ class ContinuousBatchingEngine:
             "peak_pages_used": peak_pages,
             "peak_pool_utilization": peak_pages / max(self.n_pages, 1),
             "total_tokens_served": total_tokens,
+            "preemptions": counters["preemptions"],
+            "preempt_requeue": counters["preempt_requeue"],
+            "preempt_swap": counters["preempt_swap"],
+            "resumes": counters["resumes"],
+            "replay_steps": counters["replay_steps"],
+            "swap_bytes_out": swap.bytes_out,
+            "swap_bytes_in": swap.bytes_in,
+            "swap_peak_bytes": swap.peak_bytes,
             "cache_bytes_per_value":
                 cache_mod.bytes_per_value(self.cc),
             "cache_total_bytes":
@@ -500,6 +866,21 @@ def main(argv=None):
     ap.add_argument("--max-active", type=int, default=0,
                     help="paged engine: concurrent sequence slots "
                          "(default: --batch)")
+    ap.add_argument("--preempt", choices=("off", "requeue", "swap"),
+                    default="off",
+                    help="paged engine: on decode-time pool exhaustion, "
+                         "preempt victims — requeue (drop pages, replay on "
+                         "resume) or swap (packed pages to host, verbatim "
+                         "restore); off raises PoolExhausted")
+    ap.add_argument("--victim", choices=("last_joined", "fewest_pages"),
+                    default="last_joined",
+                    help="paged engine: preemption victim selection")
+    ap.add_argument("--oversubscribe", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="paged engine: shrink the pool to FRAC of the "
+                         "batch's uncontended working set (forces "
+                         "preemption; requires --preempt requeue|swap, "
+                         "overrides --n-pages)")
     ap.add_argument("--calibrate", type=int, default=2,
                     help="calibration batches (0 = dynamic scales)")
     ap.add_argument("--prequantize", action="store_true",
@@ -540,11 +921,23 @@ def main(argv=None):
     if args.engine == "paged":
         need = args.prompt_len + args.gen - 1
         max_seq = -(-need // args.page_size) * args.page_size
+        pages_per_seq = max_seq // args.page_size
+        n_pages = args.n_pages
+        if args.oversubscribe:
+            if args.preempt == "off":
+                ap.error("--oversubscribe deliberately undersizes the "
+                         "pool; pick --preempt requeue|swap so the engine "
+                         "can evict victims instead of raising")
+            n_pages = max(pages_per_seq,
+                          math.ceil(args.oversubscribe * args.batch
+                                    * pages_per_seq))
+        policy = None if args.preempt == "off" else SchedulerPolicy(
+            preempt=args.preempt, victim=args.victim)
         engine = ContinuousBatchingEngine(
             model, cache_cfg, ctx, scales,
-            page_size=args.page_size, n_pages=args.n_pages,
+            page_size=args.page_size, n_pages=n_pages,
             max_active=args.max_active or args.batch,
-            max_seq_len=max_seq)
+            max_seq_len=max_seq, policy=policy)
         reqs = [Request(np.asarray(batch["tokens"][b]), args.gen)
                 for b in range(args.batch)]
         if not args.no_warmup:
@@ -555,6 +948,13 @@ def main(argv=None):
               f"{stats['peak_pages_used']}/{stats['pool_pages']} pages "
               f"({stats['page_size']} slots) peak, "
               f"{stats['cache_total_bytes']/1e6:.2f} MB modeled")
+        if policy is not None:
+            print(f"preempt={args.preempt} victim={args.victim}: "
+                  f"{stats['preemptions']} preemptions, "
+                  f"{stats['resumes']} resumes, "
+                  f"{stats['replay_steps']} replay steps, "
+                  f"swap {stats['swap_bytes_out']/1e6:.2f} MB out / "
+                  f"{stats['swap_bytes_in']/1e6:.2f} MB in")
         print("sample:", results[0][:16])
         return stats
 

@@ -4,10 +4,13 @@ Covers: bit-identity of the block-table gather kernel against the
 contiguous fused kernel (ref and pallas-interpret, full/partial block
 tables, windowed = ring-style masking), PagedCacheStore write semantics
 (page/offset addressing, per-slot scale freeze, trash-page isolation),
-allocator edge cases (exhaustion raises host-side before tracing, page
-reuse after eviction is bit-exact), and the end-to-end acceptance: the
-continuous-batching engine reproduces the contiguous scan engine's greedy
-tokens for ragged requests on both the int8 grid and the 5opt codec.
+allocator edge cases (exhaustion raises host-side before tracing, the
+used-set refcount guard, watermarks, page reuse after eviction is
+bit-exact), swap round-trip byte identity (preemption's swap-out/swap-in
+across the vsparq x signed x window grid), and the end-to-end acceptance:
+the continuous-batching engine reproduces the contiguous scan engine's
+greedy tokens for ragged requests on both the int8 grid and the 5opt
+codec. Scheduler-level preemption traces live in tests/test_scheduler.py.
 """
 import dataclasses
 import math
@@ -22,8 +25,10 @@ from repro.core.sparq import SparqConfig
 from repro.kernels import ops
 from repro.models.cache import CacheConfig, CacheStore
 from repro.models.paging import (PageAllocator, PagedCacheStore,
-                                 PoolExhausted, adopt_prefill, evict_slot,
-                                 modeled_pool_bytes, paged_decode_attention)
+                                 PoolExhausted, SwapStore, adopt_prefill,
+                                 evict_slot, gather_slot_pages,
+                                 modeled_pool_bytes, paged_decode_attention,
+                                 restore_slot_pages)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -238,6 +243,91 @@ class TestPagedCacheStore:
 
 
 # ----------------------------------------------------------------------
+# swap round trip: preemption's swap-out -> swap-in is byte-verbatim
+# ----------------------------------------------------------------------
+
+class TestSwapRoundTrip:
+    """Packed data/meta/scale planes survive a host swap round trip
+    byte-identically, and fused paged decode over resumed pages matches
+    the never-preempted oracle — across the vsparq x signed grid and for
+    full-attention and windowed (ring-style) masking."""
+    L, ps, KV, hd = 2, 4, 2, 8                  # stacked layers, geometry
+
+    def _stacked(self, tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.L,) + a.shape).copy(), tree)
+
+    def _filled_store(self, cfg, n_tok=10, seed=0):
+        """Stacked paged store with slot 1 holding an adopted prefill."""
+        cc = CacheConfig(layout="sparq", sparq=cfg, impl="reference")
+        nbp = 3
+        cs = CacheStore.init((1, nbp * self.ps, self.KV, self.hd), cc)
+        k = jax.random.normal(jax.random.PRNGKey(seed),
+                              (1, n_tok, self.KV, self.hd))
+        cs = cs.update(k, k * 0.5)
+        st = self._stacked(PagedCacheStore.init(
+            n_seqs=2, n_pages=8, page_size=self.ps, n_blocks=4,
+            kv_heads=self.KV, head_dim=self.hd, cc=cc))
+        pages = jnp.asarray([5, 0, 3], jnp.int32)
+        return (adopt_prefill(st, self._stacked(cs), jnp.int32(1), pages),
+                pages, cc, n_tok)
+
+    @pytest.mark.parametrize("vsparq", [True, False])
+    @pytest.mark.parametrize("signed", [True, False])
+    @pytest.mark.parametrize("window", [0, 8])
+    def test_bits_and_attention_survive_roundtrip(self, vsparq, signed,
+                                                  window):
+        cfg = SparqConfig.opt5(signed=signed, vsparq=vsparq)
+        st, pages, cc, n_tok = self._filled_store(cfg)
+        swap = SwapStore()
+        planes = gather_slot_pages(st, jnp.int32(1), pages)
+        nbytes = swap.put(7, [planes], pos=n_tok)
+        assert nbytes == swap.bytes_out == swap.resident_bytes > 0
+        # resume into a *different* slot and different pages of a fresh,
+        # partly-dirty pool (restore overwrites every claimed byte)
+        fresh = self._stacked(PagedCacheStore.init(
+            n_seqs=2, n_pages=8, page_size=self.ps, n_blocks=4,
+            kv_heads=self.KV, head_dim=self.hd, cc=cc))
+        fresh = dataclasses.replace(
+            fresh, k_data=fresh.k_data.at[:].set(111))
+        new_pages = jnp.asarray([2, 6, 1], jnp.int32)
+        (host_groups,), pos = swap.pop(7)
+        assert swap.bytes_in == nbytes and swap.resident_bytes == 0
+        restored = restore_slot_pages(
+            fresh, {k: jnp.asarray(v) for k, v in host_groups.items()},
+            jnp.int32(0), new_pages, jnp.int32(pos))
+        # byte identity of every packed plane and the per-layer scales
+        back = gather_slot_pages(restored, jnp.int32(0), new_pages)
+        for name in ("k_data", "k_meta", "v_data", "v_meta",
+                     "k_scale", "v_scale"):
+            np.testing.assert_array_equal(np.asarray(back[name]),
+                                          np.asarray(planes[name]))
+        np.testing.assert_array_equal(np.asarray(restored.seq_pos[:, 0]),
+                                      [pos] * self.L)
+        # fused paged decode over the resumed slot == never-swapped oracle
+        rng = np.random.default_rng(3)
+        q = jnp.broadcast_to(                   # same query for both slots
+            jnp.asarray(rng.normal(size=(1, 1, self.KV * 2, self.hd)),
+                        jnp.float32), (2, 1, self.KV * 2, self.hd))
+        for layer in range(self.L):
+            take = lambda t, l=layer: jax.tree.map(lambda a: a[l], t)
+            want = paged_decode_attention(q, take(st), window=window)
+            got = paged_decode_attention(q, take(restored), window=window)
+            np.testing.assert_array_equal(np.asarray(want)[1],
+                                          np.asarray(got)[0])
+
+    def test_swapstore_rejects_double_put(self):
+        cfg = SparqConfig.opt5(signed=True)
+        st, pages, _, n_tok = self._filled_store(cfg)
+        swap = SwapStore()
+        swap.put(1, [gather_slot_pages(st, jnp.int32(1), pages)], n_tok)
+        assert 1 in swap and len(swap) == 1
+        with pytest.raises(AssertionError, match="already swapped"):
+            swap.put(1, [gather_slot_pages(st, jnp.int32(1), pages)], n_tok)
+        assert swap.n_pages(1) == 3 and swap.pos(1) == n_tok
+
+
+# ----------------------------------------------------------------------
 # allocator
 # ----------------------------------------------------------------------
 
@@ -264,6 +354,24 @@ class TestAllocator:
         al.free(pages)
         with pytest.raises(AssertionError):
             al.free(pages)
+
+    def test_foreign_free_asserts(self):
+        """The used-set refcount guard: freeing a page that was never
+        handed out trips immediately (not only a duplicate free)."""
+        al = PageAllocator(4)
+        al.alloc(2)
+        with pytest.raises(AssertionError, match="not allocated"):
+            al.free([3])
+        al.assert_consistent()
+
+    def test_peak_watermark(self):
+        al = PageAllocator(4)
+        a = al.alloc(3)
+        al.free(a)
+        al.alloc(1)
+        assert al.peak_used == 3                # high watermark persists
+        assert al.free_count == 3 and al.used_count == 1
+        assert set(al.free_pages).isdisjoint(al._used)
 
 
 # ----------------------------------------------------------------------
@@ -354,8 +462,9 @@ def test_pool_exhaustion_raises_before_tracing(tiny_lm):
     with pytest.raises(ValueError, match="pages"):
         eng.run(params, big)
     # each request alone fits (4 pages of 4 total) but two growing
-    # concurrently drain the free list: decode-time allocation raises
-    # host-side, before the step is traced (no preemption implemented)
+    # concurrently drain the free list: without a SchedulerPolicy,
+    # decode-time allocation raises host-side, before the step is traced
+    # (tests/test_scheduler.py covers the preemption path)
     eng2 = _engine(model, cc, page_size=8, n_pages=4, max_active=2,
                    max_seq_len=32)
     from repro.models.paging import PoolExhausted as PE

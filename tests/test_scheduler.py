@@ -1,0 +1,399 @@
+"""Preemption scheduler for oversubscribed paged serving.
+
+The engine's scheduling state machine (admission, join/evict, alloc/free,
+preempt/resume) has outgrown example-driven testing, so this module drives
+it with deterministic *randomized traces*: a seeded generator emits
+arrival/length/eviction traces which are replayed through the paged engine
+at several pool sizes — including heavily oversubscribed ones — under both
+preemption policies, asserting per-step invariants through the engine's
+`trace_hook` (no page double-use, free-list conservation, block-table /
+seq-position consistency, host/device agreement) plus end-state greedy
+token equality against the uncontended contiguous engine.
+
+Also here: the acceptance matrix (int8 grid under both policies; the trace
+runs cover 4-bit 5opt), strict resume-before-admit priority, the
+decode-time PoolExhausted regression (a failed step allocation must not
+strand pages off the free list), and a property test of arbitrary
+alloc/free/swap interleavings on the allocator (hypothesis when available,
+a seeded deterministic sweep otherwise, same convention as test_bsparq).
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparq import SparqConfig
+from repro.models.cache import CacheConfig
+from repro.models.paging import PageAllocator, PoolExhausted
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI images
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+PS = 4                                          # page size for every trace
+
+
+# ----------------------------------------------------------------------
+# allocator property test: arbitrary alloc/free/swap interleavings
+# ----------------------------------------------------------------------
+
+def _run_allocator_script(n_pages: int, ops):
+    """Interpret (op, arg) pairs against a PageAllocator, mirroring the
+    engine's usage: sequences hold pages, swap-out frees them (the swap
+    store keeps only bytes, never page ids), swap-in allocates afresh.
+    Conservation and uniqueness are asserted after every operation."""
+    al = PageAllocator(n_pages)
+    held = {}                                   # seq tag -> owned pages
+    swapped = {}                                # seq tag -> page count
+    next_tag = 0
+    for op_i, arg in ops:
+        op = ("alloc", "free", "swap_out", "swap_in")[op_i % 4]
+        if op == "alloc":
+            n = 1 + arg % 3
+            if n <= al.free_count:
+                pages = al.alloc(n)
+                assert len(set(pages)) == n
+                for other in held.values():
+                    assert set(pages).isdisjoint(other), "double handout"
+                held[next_tag] = pages
+                next_tag += 1
+            else:
+                before = al.free_pages
+                with pytest.raises(PoolExhausted):
+                    al.alloc(n)
+                assert al.free_pages == before, "failed alloc took pages"
+        elif op == "free" and held:
+            tag = sorted(held)[arg % len(held)]
+            al.free(held.pop(tag))
+        elif op == "swap_out" and held:
+            tag = sorted(held)[arg % len(held)]
+            pages = held.pop(tag)
+            al.free(pages)                      # pages return; bytes host
+            swapped[tag] = len(pages)
+        elif op == "swap_in" and swapped:
+            tag = sorted(swapped)[arg % len(swapped)]
+            if swapped[tag] <= al.free_count:
+                held[tag] = al.alloc(swapped.pop(tag))
+        # free-list conservation after every operation
+        owned = [p for pages in held.values() for p in pages]
+        assert len(owned) == len(set(owned))
+        assert al.free_count + len(owned) == n_pages
+        al.assert_consistent()
+    return al, held
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(1, 12),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(0, 10 ** 6)),
+                    max_size=60))
+    @settings(max_examples=200, deadline=None)
+    def test_allocator_interleavings_property(n_pages, ops):
+        _run_allocator_script(n_pages, ops)
+
+
+def test_allocator_interleavings_sweep():
+    """Deterministic fallback: seeded random scripts exercise the same
+    interleaving property when hypothesis is unavailable."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        n_pages = int(rng.integers(1, 12))
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 10 ** 6)))
+               for _ in range(60)]
+        _run_allocator_script(n_pages, ops)
+
+
+# ----------------------------------------------------------------------
+# randomized-trace harness
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import Model
+    cfg = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    return model, params
+
+
+def _cc(codec=None):
+    codec = codec or SparqConfig.opt5(signed=True)
+    # attn_bk = page size: the contiguous oracle's fused decode tiles
+    # coincide with pages, so oracle and paged tokens are bit-identical
+    return dataclasses.replace(
+        CacheConfig.sparq_cache(codec, impl="reference"), attn_bk=PS)
+
+
+def _make_trace(seed: int, n_req: int, vocab: int):
+    """Seeded arrival/length trace: ragged prompts, ragged token budgets
+    (eviction times), staggered arrivals."""
+    rng = np.random.default_rng(seed)
+    from repro.launch.serve import Request
+    reqs = []
+    for _ in range(n_req):
+        # short prompts + long budgets: sequences admit cheap and then
+        # grow, which is what drives decode-time pool exhaustion
+        L = int(rng.integers(3, 8))
+        g = int(rng.integers(6, 15))
+        a = int(rng.integers(0, 12))
+        reqs.append(Request(rng.integers(0, vocab, (L,)), g, arrive_at=a))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def trace(tiny_lm):
+    model, _ = tiny_lm
+    return _make_trace(seed=0, n_req=6, vocab=model.cfg.vocab_size)
+
+
+@pytest.fixture(scope="module")
+def oracle(tiny_lm, trace):
+    """Uncontended per-request greedy tokens from the contiguous engine."""
+    from repro.launch.serve import DecodeEngine
+    model, params = tiny_lm
+    eng = DecodeEngine(model, _cc())
+    out = {}
+    for rid, req in enumerate(trace):
+        toks, _ = eng.generate(
+            params, {"tokens": jnp.asarray(req.tokens)[None]}, req.gen,
+            warmup=False)
+        out[rid] = np.asarray(toks)[0]
+    return out
+
+
+class InvariantChecker:
+    """Per-step scheduler invariants, asserted from outside the engine
+    through `run(trace_hook=...)` — an independent re-derivation of the
+    accounting the engine also asserts internally."""
+
+    def __init__(self, ps: int, deep_every: int = 5):
+        self.ps = ps
+        self.deep_every = deep_every
+        self.steps = 0
+        self.max_owned = 0
+
+    def __call__(self, snap):
+        slots = snap["slots"]
+        owned = [p for info in slots.values() for p in info["pages"]]
+        both = list(snap["free_pages"]) + owned
+        # no page double-use, free-list conservation (free ⊎ owned = pool)
+        assert len(both) == len(set(both)), "page double-use"
+        assert sorted(both) == list(range(snap["n_pages"])), \
+            "free-list conservation violated"
+        self.max_owned = max(self.max_owned, len(owned))
+        for s, info in slots.items():
+            # block table is exactly the owned pages, in block order,
+            # as a contiguous prefix of the row
+            row = snap["host_bt"][s]
+            nb = len(info["pages"])
+            assert list(row[row >= 0]) == info["pages"]
+            assert (row[:nb] >= 0).all() and (row[nb:] == -1).all()
+            # the sequence position lies inside its allocated blocks
+            assert 0 <= info["pos"] <= nb * self.ps
+            assert info["pos"] > (nb - 1) * self.ps - self.ps, \
+                "sequence owns more than one block past its position"
+        # a request lives in exactly one place at a time
+        places = ([info["rid"] for info in slots.values()]
+                  + snap["resume_rids"] + snap["queued"])
+        assert len(places) == len(set(places)), "request in two places"
+        # host/device agreement (fetches device state; sampled)
+        if self.steps % self.deep_every == 0:
+            bt_dev = np.asarray(snap["caches"][0].block_table[0])
+            np.testing.assert_array_equal(bt_dev, snap["host_bt"])
+            pos_dev = np.asarray(snap["caches"][0].seq_pos[0])
+            for s in range(pos_dev.shape[0]):
+                want = slots[s]["pos"] if s in slots else -1
+                assert pos_dev[s] == want, f"slot {s} position drift"
+        self.steps += 1
+
+
+# pool sizes: generous (no preemption expected), tight, and heavily
+# oversubscribed (barely above the largest single request)
+@pytest.mark.parametrize("n_pages,policy_mode,expect_preempt", [
+    (24, "requeue", False),
+    (8, "requeue", True),
+    (8, "swap", True),
+    (6, "requeue", True),
+    (6, "swap", True),
+], ids=["pool24-requeue", "pool8-requeue", "pool8-swap",
+        "pool6-requeue", "pool6-swap"])
+def test_trace_invariants_and_token_equality(tiny_lm, trace, oracle,
+                                             n_pages, policy_mode,
+                                             expect_preempt):
+    """Replay the seeded trace at one pool size/policy: every step holds
+    the page-accounting invariants and the end state reproduces the
+    uncontended contiguous tokens exactly."""
+    from repro.launch.serve import ContinuousBatchingEngine, SchedulerPolicy
+    model, params = tiny_lm
+    per_req = [math.ceil((len(r.tokens) + r.gen - 1) / PS) for r in trace]
+    assert max(per_req) < n_pages <= sum(per_req) or n_pages == 24
+    eng = ContinuousBatchingEngine(
+        model, _cc(), page_size=PS, n_pages=n_pages, max_active=3,
+        max_seq_len=24,
+        policy=SchedulerPolicy(preempt=policy_mode, victim="last_joined"))
+    check = InvariantChecker(ps=PS)
+    results, stats = eng.run(params, trace, trace_hook=check)
+    assert check.steps == stats["decode_steps"] > 0
+    if expect_preempt:
+        assert stats["preemptions"] > 0, \
+            "trace did not stress the pool — tighten it"
+        assert check.max_owned <= n_pages
+        if policy_mode == "swap":
+            assert stats["swap_bytes_out"] == stats["swap_bytes_in"] > 0
+            assert stats["preempt_swap"] == stats["preemptions"]
+        else:
+            assert stats["replay_steps"] > 0
+            assert stats["swap_bytes_out"] == 0
+    else:
+        assert stats["preemptions"] == 0
+    for rid in oracle:
+        np.testing.assert_array_equal(results[rid], oracle[rid])
+
+
+def test_trace_policies_agree_on_victim_rule(tiny_lm, trace, oracle):
+    """fewest_pages victim selection also preserves exactness (different
+    preemption order, same tokens)."""
+    from repro.launch.serve import ContinuousBatchingEngine, SchedulerPolicy
+    model, params = tiny_lm
+    eng = ContinuousBatchingEngine(
+        model, _cc(), page_size=PS, n_pages=8, max_active=3, max_seq_len=24,
+        policy=SchedulerPolicy(preempt="swap", victim="fewest_pages"))
+    results, stats = eng.run(params, trace, trace_hook=InvariantChecker(PS))
+    assert stats["preemptions"] > 0
+    for rid in oracle:
+        np.testing.assert_array_equal(results[rid], oracle[rid])
+
+
+# ----------------------------------------------------------------------
+# acceptance: int8 grid under both policies (5opt runs in the trace grid)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["requeue", "swap"])
+def test_oversubscribed_int8_matches_uncontended(tiny_lm, mode):
+    from repro.launch.serve import (ContinuousBatchingEngine, DecodeEngine,
+                                    Request, SchedulerPolicy)
+    model, params = tiny_lm
+    cc = _cc(SparqConfig(enabled=False, signed=True))
+    rng = np.random.default_rng(11)
+    reqs = [Request(rng.integers(0, model.cfg.vocab_size, (L,)), g)
+            for L, g in zip([5, 4, 6], [10, 9, 8])]
+    eng = ContinuousBatchingEngine(
+        model, cc, page_size=PS, n_pages=5, max_active=3, max_seq_len=16,
+        policy=SchedulerPolicy(preempt=mode))
+    results, stats = eng.run(params, reqs, trace_hook=InvariantChecker(PS))
+    assert stats["preemptions"] > 0
+    contiguous = DecodeEngine(model, cc)
+    for rid, req in enumerate(reqs):
+        toks, _ = contiguous.generate(
+            params, {"tokens": jnp.asarray(req.tokens)[None]}, req.gen,
+            warmup=False)
+        np.testing.assert_array_equal(results[rid], np.asarray(toks)[0])
+
+
+def test_finished_slot_is_evicted_not_preempted(tiny_lm):
+    """A gen==1 request finishes at admission and its pages are
+    reclaimed by ordinary eviction before the peer's growth needs them:
+    serving it through a contended pool costs zero preemptions (the
+    scheduler may never pay a swap round trip / replay for a sequence
+    that will emit nothing)."""
+    from repro.launch.serve import (ContinuousBatchingEngine, DecodeEngine,
+                                    Request, SchedulerPolicy)
+    model, params = tiny_lm
+    rng = np.random.default_rng(4)
+    grower = Request(rng.integers(0, model.cfg.vocab_size, (5,)), 12)
+    oneshot = Request(rng.integers(0, model.cfg.vocab_size, (8,)), 1,
+                      arrive_at=1)
+    eng = ContinuousBatchingEngine(
+        model, _cc(), page_size=PS, n_pages=4, max_active=2, max_seq_len=16,
+        policy=SchedulerPolicy(preempt="swap"))
+    results, stats = eng.run(params, [grower, oneshot],
+                             trace_hook=InvariantChecker(PS))
+    assert stats["preemptions"] == 0, \
+        "scheduler preempted instead of reclaiming a finished slot"
+    contiguous = DecodeEngine(model, _cc())
+    for rid, req in enumerate([grower, oneshot]):
+        toks, _ = contiguous.generate(
+            params, {"tokens": jnp.asarray(req.tokens)[None]}, req.gen,
+            warmup=False)
+        np.testing.assert_array_equal(results[rid], np.asarray(toks)[0])
+
+
+# ----------------------------------------------------------------------
+# resume-before-admit priority
+# ----------------------------------------------------------------------
+
+def test_resume_has_priority_over_admission(tiny_lm):
+    """While a preempted sequence waits for pages, a cheaper queued
+    request must NOT jump past it: B (swapped, needs 3 pages) blocks C
+    (needs 1 page, pool has 1 free) until B resumes."""
+    from repro.launch.serve import (ContinuousBatchingEngine, Request,
+                                    SchedulerPolicy)
+    model, params = tiny_lm
+    rng = np.random.default_rng(5)
+    mk = lambda L, g: Request(
+        rng.integers(0, model.cfg.vocab_size, (L,)), g)
+    reqs = [mk(4, 8), mk(4, 6), mk(4, 2)]       # A, B, C
+    eng = ContinuousBatchingEngine(
+        model, _cc(), page_size=PS, n_pages=4, max_active=2, max_seq_len=12,
+        policy=SchedulerPolicy(preempt="swap", victim="last_joined"))
+    active_by_step = []
+    free_by_step = []
+
+    def hook(snap):
+        active_by_step.append(
+            {info["rid"] for info in snap["slots"].values()})
+        free_by_step.append(len(snap["free_pages"]))
+
+    results, stats = eng.run(params, reqs, trace_hook=hook)
+    assert stats["preempt_swap"] >= 1
+    b_steps = [i for i, act in enumerate(active_by_step) if 1 in act]
+    c_steps = [i for i, act in enumerate(active_by_step) if 2 in act]
+    gaps = [i for i in range(b_steps[0], b_steps[-1] + 1)
+            if i not in b_steps]
+    assert gaps, "B was never preempted mid-run"
+    # during B's preemption gap there were free pages C could have used;
+    # strict resume-before-admit kept C queued anyway
+    assert any(free_by_step[i] >= 1 for i in gaps)
+    assert all(i not in c_steps for i in gaps), \
+        "admission jumped past the resume queue"
+    from repro.launch.serve import DecodeEngine
+    contiguous = DecodeEngine(model, _cc())
+    for rid, req in enumerate(reqs):
+        toks, _ = contiguous.generate(
+            params, {"tokens": jnp.asarray(req.tokens)[None]}, req.gen,
+            warmup=False)
+        np.testing.assert_array_equal(results[rid], np.asarray(toks)[0])
+
+
+# ----------------------------------------------------------------------
+# regression: failed decode-time allocation must not strand pages
+# ----------------------------------------------------------------------
+
+def test_failed_step_allocation_releases_pages(tiny_lm):
+    """Without a policy, concurrent decode growth can exhaust the pool;
+    the raised PoolExhausted must leave the allocator conserving every
+    page (a partially-allocated step may not leak pages off the free
+    list): free ⊎ slot-owned == the whole pool."""
+    from repro.launch.serve import ContinuousBatchingEngine, Request
+    model, params = tiny_lm
+    rng = np.random.default_rng(2)
+    reqs = [Request(rng.integers(0, model.cfg.vocab_size, (8,)), 18)
+            for _ in range(2)]
+    eng = ContinuousBatchingEngine(
+        model, _cc(), page_size=8, n_pages=4, max_active=2, max_seq_len=32)
+    with pytest.raises(PoolExhausted, match="exhausted"):
+        eng.run(params, reqs)
+    allocator = eng._debug_state["allocator"]
+    slots = eng._debug_state["slots"]
+    owned = [p for st_ in slots if st_ is not None for p in st_.pages]
+    assert len(owned) == len(set(owned))
+    assert sorted(owned + list(allocator.free_pages)) == list(range(4)), \
+        "pages leaked by the failed step allocation"
+    allocator.assert_consistent()
