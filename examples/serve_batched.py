@@ -80,6 +80,21 @@ def main():
               f"tokens match contiguous: {results[rid][:8]}...")
     print("all requests token-identical to the contiguous engine")
 
+    # ---- chunked ragged prefill: the same workload admitted through
+    # the fixed-shape chunk program (one jit for all eight distinct
+    # prompt lengths, §5.1 pages written directly). Prompts fit one
+    # segment here, so the tokens must be bit-identical to the
+    # sequential-admission run above.
+    engine_c = ContinuousBatchingEngine(
+        model, cc, page_size=PAGE, n_pages=POOL, max_active=SLOTS,
+        max_seq_len=80, prefill="chunked", chunk_size=48, chunk_align=8)
+    results_c, stats_c = engine_c.run(params, reqs)
+    for rid in results:
+        np.testing.assert_array_equal(results_c[rid], results[rid])
+    print(f"chunked prefill: {stats_c['prefill_chunks']} chunks, "
+          f"{stats_c['prefill_compile_count']} compiled program(s) for "
+          f"{len(set(lens))} distinct prompt lengths — tokens identical")
+
     # ---- oversubscribed: same workload, half the pool, both policies.
     # Preemption must be invisible in the tokens — only in the stats.
     for mode in ("requeue", "swap"):
@@ -98,6 +113,21 @@ def main():
               f"swap {stats_o['swap_bytes_out']/1e3:.1f} kB out — "
               f"tokens identical")
     print("preemption is token-invisible under both policies")
+
+    # ---- everything at once: chunked admission over an oversubscribed
+    # pool with the per-victim cost model picking requeue vs swap.
+    engine_a = ContinuousBatchingEngine(
+        model, cc, page_size=PAGE, n_pages=POOL_OVER, max_active=SLOTS,
+        max_seq_len=80, prefill="chunked", chunk_size=48, chunk_align=8,
+        policy=SchedulerPolicy(preempt="auto"))
+    results_a, stats_a = engine_a.run(params, reqs)
+    assert stats_a["preemptions"] > 0
+    for rid in results:
+        np.testing.assert_array_equal(results_a[rid], results[rid])
+    print(f"chunked + oversubscribed + auto policy: "
+          f"{stats_a['preempt_requeue']} requeues / "
+          f"{stats_a['preempt_swap']} swaps chosen by the cost model — "
+          f"tokens still identical")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.sparq_decode_attn import (sparq_decode_attn_pallas,
                                              sparq_paged_decode_attn_pallas)
 from repro.kernels.sparq_dequant import sparq_dequant_pallas
+from repro.kernels.sparq_prefill_attn import sparq_chunked_prefill_attn_pallas
 from repro.kernels.sparq_matmul import sparq_matmul_pallas
 from repro.kernels.sparq_quant import sparq_quant_pallas
 
@@ -259,6 +260,63 @@ def sparq_decode_attention(
     else:
         raise ValueError(impl)
     return out.reshape(B, 1, H, hd)
+
+
+def sparq_chunked_prefill_attention(
+    q: jnp.ndarray,            # (C, H, hd) float — one chunk of queries
+    k_chunk: jnp.ndarray,      # (C, KV, hd) float — chunk K (pre-quant)
+    v_chunk: jnp.ndarray,      # (C, KV, hd) float
+    k_data: jnp.ndarray,       # (P, ps, KV, hd) int8 window-code pool
+    k_meta: jnp.ndarray,       # (P, ps, KV, hd) int8 meta-byte pool
+    k_scale: jnp.ndarray,      # (S,) f32 per-slot site scales
+    v_data: jnp.ndarray,
+    v_meta: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    block_table: jnp.ndarray,  # (S, NB) int32 page per block (-1 unset)
+    seq_id: jnp.ndarray,       # (C,) int32 slot per stream token (-1 pad)
+    pos: jnp.ndarray,          # (C,) int32 position per token
+    hist: jnp.ndarray,         # (C,) int32 per-token history boundary
+    tile_seq: jnp.ndarray,     # (C/bq,) int32 slot per aligned query tile
+    window: int = 0,
+    impl: str = "auto",
+    bq: int = 8,
+) -> jnp.ndarray:
+    """Ragged chunked-prefill flash attention over the §5.1 page pool.
+
+    One fixed-shape token stream carries a chunk of ragged pending
+    prompts (per-token (seq_id, pos) metadata; each sequence's run is
+    packed contiguously and aligned to `bq`). Every token attends to its
+    sequence's already-written packed pages for positions below its
+    history boundary `hist` (block-table gather + in-loop meta-decode)
+    followed by causal segment-masked attention over the chunk's float
+    K/V in [hist, pos]. One compiled program serves every prompt length
+    and join pattern — the point of the chunked prefill path. `hist` is
+    the token's segment start, so per-prompt numerics are independent of
+    stream packing (see kernels.ref.ref_sparq_chunked_prefill_attn).
+
+    Returns f32 (C, H, hd); padding rows (seq_id < 0) are zeros."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "reference"
+    C, H, hd = q.shape
+    KV = k_data.shape[2]
+    G = H // KV
+    assert C % bq == 0, (C, bq)
+    qg = q.reshape(C, KV, G, hd)
+    bt = block_table.astype(jnp.int32)
+    S = bt.shape[0]
+    ks = jnp.broadcast_to(jnp.asarray(k_scale, jnp.float32), (S,))
+    vs = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32), (S,))
+    args = (qg, k_chunk, v_chunk, k_data, k_meta, ks, v_data, v_meta, vs,
+            bt, seq_id.astype(jnp.int32), pos.astype(jnp.int32),
+            hist.astype(jnp.int32), tile_seq.astype(jnp.int32))
+    if impl == "reference":
+        out = _ref.ref_sparq_chunked_prefill_attn(*args, window=window)
+    elif impl == "pallas":
+        out = sparq_chunked_prefill_attn_pallas(
+            *args, window=window, bq=bq, interpret=not _on_tpu())
+    else:
+        raise ValueError(impl)
+    return out.reshape(C, H, hd)
 
 
 def sparq_paged_decode_attention(

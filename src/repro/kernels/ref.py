@@ -154,6 +154,126 @@ def ref_sparq_decode_attn(q, k_data, k_meta, k_scale, v_data, v_meta,
     return acc / jnp.maximum(l, 1e-30)
 
 
+def ref_sparq_chunked_prefill_attn(q, k_chunk, v_chunk, k_data, k_meta,
+                                   k_scale, v_data, v_meta, v_scale,
+                                   block_table, seq_id, pos, hist,
+                                   tile_seq, *, window: int = 0):
+    """Tiled oracle for sparq_chunked_prefill_attn_pallas: ragged chunked
+    prefill over a packed token stream.
+
+    One fixed-shape chunk of C prompt tokens (possibly from several
+    sequences, possibly only a slice of a long prompt) attends to
+
+      1. its own sequence's *already-written* §5.1 packed pages — every
+         position below the token's history boundary `hist` — gathered
+         through the per-slot block table and meta-decoded tile by tile
+         (one page == one Tk tile, same `_meta_decode32` datapath as the
+         decode kernels), and
+      2. the float K/V of its own history window [hist, pos]: causal
+         attention over the chunk, segment-masked by per-token sequence
+         id AND bounded below by `hist`.
+
+    `hist` is per token: the scheduler sets it to the token's *segment*
+    start ((pos // seg) * seg), and packs whole segments only — so a
+    prompt's float-vs-packed attention split depends only on the prompt
+    and the segment quantum, never on how chunks happened to be packed
+    (this is what keeps chunked prefill deterministic per request and
+    requeue-replay bit-exact). Tokens in [hist, pos) are guaranteed to be
+    in the same chunk; positions below hist are guaranteed already
+    written (possibly by this very chunk program — writes precede reads).
+
+    Page tiles run first (ascending kpos), the in-chunk stage last; the
+    pallas kernel walks the identical stage order with the identical f32
+    update arithmetic (interpret-mode agreement is exact for the in-chunk
+    stage and within a couple of f32 ulps over page tiles, where XLA's
+    fusion of this scanned oracle reorders the multiply-add chain).
+
+    q           [C, KV, G, hd] float — chunk queries, GQA via grouping
+    k/v_chunk   [C, KV, hd] float — the chunk's own (pre-quantization) K/V
+    k/v planes  [P, ps, KV, hd] int8 — the global §5.1 page pools
+    k/v scale   [S] f32 — per-slot site scales (frozen at first write)
+    block_table [S, NB] int32 — physical page per logical block (-1 unset)
+    seq_id      [C] int32 — sequence slot per stream token (-1 = padding)
+    pos         [C] int32 — absolute position of each token in its prompt
+    hist        [C] int32 — per-token history boundary: packed pages for
+                kpos < hist, float in-chunk keys for kpos in [hist, pos]
+    tile_seq    [C/bq] int32 — slot owning each aligned query tile (-1 =
+                padding tile); the stream packs each sequence's run
+                aligned to bq so one tile gathers one block-table row
+    Returns f32 [C, KV, G, hd]; fully-masked (padding) rows are zeros.
+    """
+    C, KV, G, hd = q.shape
+    ps = k_data.shape[1]
+    NB = block_table.shape[1]
+    nt = tile_seq.shape[0]
+    assert C % nt == 0, (C, nt)
+    bq = C // nt
+    qf = q.astype(jnp.float32)
+    sm_scale = hd ** -0.5
+    tseq = jnp.repeat(jnp.asarray(tile_seq, jnp.int32), bq)        # [C]
+    s_safe = jnp.maximum(tseq, 0)
+    ksc = jnp.asarray(k_scale, jnp.float32)[s_safe]                # [C]
+    vsc = jnp.asarray(v_scale, jnp.float32)[s_safe]
+    qhist = jnp.asarray(hist, jnp.int32)                           # [C]
+    sid = jnp.asarray(seq_id, jnp.int32)
+    qpos = jnp.asarray(pos, jnp.int32)
+    qvalid = sid >= 0
+
+    def upd(m, l, s, ok):
+        """Shared online-softmax statistics update. Returns the new
+        (m, l), the correction factor for the running accumulator, and
+        the masked probabilities p (the caller contracts p @ V — the two
+        stages gather V with different shapes)."""
+        okb = ok[:, None, None, :]                 # [C, 1, 1, keys]
+        s = jnp.where(okb, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(okb, p, 0.0)
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        return m_new, l_new, corr, p
+
+    def tile(carry, t):
+        m, l, acc = carry
+        pages = block_table[s_safe, t]             # [C]
+        pg = jnp.maximum(pages, 0)
+        k = _meta_decode32(k_data[pg], k_meta[pg],
+                           ksc[:, None, None, None])   # [C, ps, KV, hd]
+        s = jnp.einsum("ckgh,cskh->ckgs", qf, k,
+                       preferred_element_type=jnp.float32) * sm_scale
+        kp = t * ps + jnp.arange(ps, dtype=jnp.int32)[None]    # [1, ps]
+        ok = (pages >= 0)[:, None] & qvalid[:, None] & (kp < qhist[:, None])
+        if window:
+            ok &= kp > qpos[:, None] - window
+        m, l, corr, p = upd(m, l, s, ok)
+        v = _meta_decode32(v_data[pg], v_meta[pg], vsc[:, None, None, None])
+        pv = jnp.einsum("ckgs,cskh->ckgh", p, v,
+                        preferred_element_type=jnp.float32)
+        return (m, l, acc * corr + pv), None
+
+    m0 = jnp.full((C, KV, G, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((C, KV, G, 1), jnp.float32)
+    a0 = jnp.zeros((C, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(tile, (m0, l0, a0), jnp.arange(NB))
+
+    # in-chunk causal stage: float K/V, segment mask by sequence id
+    kcf = k_chunk.astype(jnp.float32)
+    vcf = v_chunk.astype(jnp.float32)
+    s = jnp.einsum("ckgh,jkh->ckgj", qf, kcf,
+                   preferred_element_type=jnp.float32) * sm_scale
+    ok = (sid[None, :] == sid[:, None]) & qvalid[:, None] \
+        & (qpos[None, :] <= qpos[:, None]) \
+        & (qpos[None, :] >= qhist[:, None])
+    if window:
+        ok &= qpos[None, :] > qpos[:, None] - window
+    m, l, corr, p = upd(m, l, s, ok)
+    pv = jnp.einsum("ckgj,jkh->ckgh", p, vcf,
+                    preferred_element_type=jnp.float32)
+    acc = acc * corr + pv
+    return acc / jnp.maximum(l, 1e-30)
+
+
 def ref_sparq_paged_decode_attn(q, k_data, k_meta, k_scale, v_data, v_meta,
                                 v_scale, block_table, cur, *,
                                 window: int = 0):

@@ -1,0 +1,210 @@
+"""Ragged chunked-prefill flash attention over the packed SPARQ page pool.
+
+This is the kernel behind `--prefill chunked`: admission packs ragged
+pending prompts into a fixed-shape token stream (per-token (seq_id, pos)
+metadata, each sequence's run aligned to the `bq` query tile), and ONE
+jitted program processes every chunk — no per-prompt-length retraces.
+Each chunk token attends to
+
+  1. its sequence's already-written §5.1 packed pages — every position
+     below the token's per-token history boundary `hist` — gathered
+     through the per-slot block table with the same scalar-prefetch
+     pattern as the paged decode kernel: one page == one Tk tile, §5.1
+     meta-decode (window << ShiftCtrl, mux'd-lane passthrough, per-slot
+     scale) fused inside the tile loop; and
+  2. the float K/V of its history window [hist, pos] inside the chunk:
+     causal attention segment-masked by sequence id (tokens of different
+     prompts never see each other) and bounded below by hist.
+
+The scheduler sets hist to the token's *segment* start ((pos // seg) *
+seg) and packs whole segments only, so a prompt's float-vs-packed
+attention split depends only on the prompt and the segment quantum —
+never on how the stream happened to be packed. That invariance is what
+keeps chunked prefill deterministic per request (and requeue-replay
+resume bit-exact) under any join pattern, pool size, or preemption
+schedule.
+
+Shapes and grid:
+  q          [C, KV, G, hd]  chunk queries, GQA via head grouping
+  k/v_chunk  [C, KV, hd]     the chunk's own float K/V
+  k/v pools  [P, ps, KV, hd] int8 §5.1 planes (global page pool)
+  seq_id/pos [1, C]          per-token stream metadata (-1 = padding)
+  hist       [1, C]          per-token history boundary (pages < hist)
+  tile_seq   [nt]            slot owning each bq-aligned query tile
+
+grid = (C/bq, KV, NB + 1): stages 0..NB-1 stream the tile's sequence's
+pages (ascending kpos), stage NB is the in-chunk causal stage; the stage
+axis is sequential ("arbitrary") and carries the flash statistics
+(m, l, acc) in VMEM scratch, with one row per (token, group) pair. The
+stage order and f32 update arithmetic mirror
+`kernels.ref.ref_sparq_chunked_prefill_attn` op for op. Interpret-mode
+outputs agree with the oracle to within a couple of f32 ulps (XLA fuses
+the oracle's scanned multiply-add chain differently from the
+interpreter's op-by-op execution); the in-chunk stage alone is exact,
+and each engine run uses one impl throughout, so the serving-level
+greedy-token-equality guarantees are unaffected.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.sparq_decode_attn import _meta_decode_f32
+
+
+def _kernel(tile_seq_ref, bt_ref, ks_ref, vs_ref,          # scalar pref.
+            q_ref, qseq_ref, qpos_ref, qhist_ref, kseq_ref, kpos_ref,
+            kc_ref, vc_ref, kd_ref, km_ref, vd_ref, vm_ref,
+            o_ref, m_ref, l_ref, acc_ref, *,
+            window: int, sm_scale: float, ps: int, nb: int):
+    qt = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s_tile = jnp.maximum(tile_seq_ref[qt], 0)
+    q = q_ref[:, 0].astype(jnp.float32)                # [bq, G, hd]
+    bq, G, hd = q.shape
+    q2 = q.reshape(bq * G, hd)
+    qseq = qseq_ref[0]                                 # [bq]
+    qpos = qpos_ref[0]
+    qhist = qhist_ref[0]
+    qvalid = qseq >= 0
+
+    def update(k, v, ok):
+        """One online-softmax tile update on [bq*G] rows; the mask `ok`
+        is per (token, key) and fans out over the G group rows. Identical
+        op order to the oracle's `upd` (and the decode kernels')."""
+        ok2 = jnp.repeat(ok, G, axis=0)                # [bq*G, keys]
+        s = jax.lax.dot_general(
+            q2, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        s = jnp.where(ok2, s, -jnp.inf)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(ok2, p, 0.0)
+        corr = jnp.where(jnp.isneginf(m_prev), 0.0,
+                         jnp.exp(m_prev - m_safe))
+        l_new = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(t < nb)
+    def _page_stage():
+        k = _meta_decode_f32(kd_ref[0, :, 0], km_ref[0, :, 0],
+                             ks_ref[s_tile])           # [ps, hd]
+        v = _meta_decode_f32(vd_ref[0, :, 0], vm_ref[0, :, 0],
+                             vs_ref[s_tile])
+        kp = t * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        ok = (bt_ref[s_tile, t] >= 0) & qvalid[:, None] \
+            & (kp < qhist[:, None])                    # [bq, ps]
+        if window:
+            ok &= kp > qpos[:, None] - window
+        update(k, v, ok)
+
+    @pl.when(t == nb)
+    def _chunk_stage():
+        k = kc_ref[:, 0].astype(jnp.float32)           # [C, hd]
+        v = vc_ref[:, 0].astype(jnp.float32)
+        kseq = kseq_ref[0]                             # [C]
+        kpos = kpos_ref[0]
+        ok = (kseq[None, :] == qseq[:, None]) & qvalid[:, None] \
+            & (kpos[None, :] <= qpos[:, None]) \
+            & (kpos[None, :] >= qhist[:, None])        # [bq, C]
+        if window:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        update(k, v, ok)
+        o_ref[:, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).reshape(bq, G, hd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "bq", "interpret"))
+def sparq_chunked_prefill_attn_pallas(
+    q: jnp.ndarray,            # (C, KV, G, hd) float — chunk queries
+    k_chunk: jnp.ndarray,      # (C, KV, hd) float — chunk K (pre-quant)
+    v_chunk: jnp.ndarray,      # (C, KV, hd) float
+    k_data: jnp.ndarray,       # (P, ps, KV, hd) int8 window-code pool
+    k_meta: jnp.ndarray,       # (P, ps, KV, hd) int8 meta-byte pool
+    k_scale: jnp.ndarray,      # (S,) f32 per-slot site scales
+    v_data: jnp.ndarray,
+    v_meta: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    block_table: jnp.ndarray,  # (S, NB) int32 page per block (-1 unset)
+    seq_id: jnp.ndarray,       # (C,) int32 slot per token (-1 padding)
+    pos: jnp.ndarray,          # (C,) int32 position per token
+    hist: jnp.ndarray,         # (C,) int32 per-token history boundary
+    tile_seq: jnp.ndarray,     # (C/bq,) int32 slot per query tile
+    *,
+    window: int = 0,
+    bq: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns f32 (C, KV, G, hd) attention output (padding rows zero)."""
+    C, KV, G, hd = q.shape
+    P, ps = k_data.shape[:2]
+    NB = block_table.shape[1]
+    assert C % bq == 0 and hd % 2 == 0, (C, bq, hd)
+    assert tile_seq.shape == (C // bq,), tile_seq.shape
+    kernel = functools.partial(_kernel, window=window,
+                               sm_scale=hd ** -0.5, ps=ps, nb=NB)
+    seq2d = seq_id.astype(jnp.int32).reshape(1, C)
+    pos2d = pos.astype(jnp.int32).reshape(1, C)
+    hist2d = hist.astype(jnp.int32).reshape(1, C)
+
+    def page_idx(qt, kv, t, ts, bt, ks, vs):
+        # stage t streams the tile's sequence's page t; the chunk stage
+        # (t == NB) and unallocated blocks clamp to page 0 (masked out)
+        s = jnp.maximum(ts[qt], 0)
+        return (jnp.maximum(bt[s, jnp.minimum(t, NB - 1)], 0), 0, kv, 0)
+
+    plane = pl.BlockSpec((1, ps, 1, hd), page_idx)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # tile_seq, block_table, k/v scales
+        grid=(C // bq, KV, NB + 1),
+        in_specs=[
+            pl.BlockSpec((bq, 1, G, hd),
+                         lambda qt, kv, t, *s: (qt, kv, 0, 0)),
+            pl.BlockSpec((1, bq), lambda qt, kv, t, *s: (0, qt)),
+            pl.BlockSpec((1, bq), lambda qt, kv, t, *s: (0, qt)),
+            pl.BlockSpec((1, bq), lambda qt, kv, t, *s: (0, qt)),
+            pl.BlockSpec((1, C), lambda qt, kv, t, *s: (0, 0)),
+            pl.BlockSpec((1, C), lambda qt, kv, t, *s: (0, 0)),
+            pl.BlockSpec((C, 1, hd), lambda qt, kv, t, *s: (0, kv, 0)),
+            pl.BlockSpec((C, 1, hd), lambda qt, kv, t, *s: (0, kv, 0)),
+            plane, plane, plane, plane,
+        ],
+        out_specs=pl.BlockSpec((bq, 1, G, hd),
+                               lambda qt, kv, t, *s: (qt, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),   # m: running max
+            pltpu.VMEM((bq * G, 1), jnp.float32),   # l: running denom
+            pltpu.VMEM((bq * G, hd), jnp.float32),  # acc: running numer
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((C, KV, G, hd), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tile_seq.astype(jnp.int32), block_table.astype(jnp.int32),
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+      q, seq2d, pos2d, hist2d, seq2d, pos2d, k_chunk, v_chunk,
+      k_data, k_meta, v_data, v_meta)

@@ -243,6 +243,7 @@ class SchedulerPolicy:
              traffic than fp32 planes) and scatter them back when pages
              free up — no recompute, host bandwidth cost. Bit-exact by
              construction.
+             "auto": pick per victim from the cost model below.
     victim   "last_joined": preempt the most recently admitted sequence
              first (oldest work is closest to completion).
              "fewest_pages": preempt the sequence owning the fewest pages
@@ -250,15 +251,48 @@ class SchedulerPolicy:
 
     Either way resumed sequences take strict priority over new admissions
     (resume-before-admit), so preempted work cannot starve.
+
+    Cost model (`--preempt auto`, `estimate_cost`): a requeue pays
+    recompute — the prompt re-prefills in parallel (cheap per token) but
+    every already-emitted token replays through the *sequential* decode
+    path (one latency-bound step each), so its cost grows with decode
+    progress. A swap pays bytes — the §5.1 packed pages cross the host
+    link twice (out + in), so its cost grows with resident pages but is
+    flat in decode progress. Early-life victims requeue, long-running
+    victims swap; the crossover is pinned by a unit test. The knobs are
+    modeled microseconds, not measurements — tune per deployment.
     """
-    preempt: str = "requeue"        # requeue | swap
+    preempt: str = "requeue"        # requeue | swap | auto
     victim: str = "last_joined"     # last_joined | fewest_pages
+    prefill_tok_us: float = 2.0     # re-prefill, parallel over the prompt
+    replay_tok_us: float = 60.0     # teacher-forced decode replay, per step
+    swap_gb_s: float = 8.0          # host<->device link bandwidth
 
     def __post_init__(self):
-        if self.preempt not in ("requeue", "swap"):
+        if self.preempt not in ("requeue", "swap", "auto"):
             raise ValueError(f"unknown preempt mode {self.preempt!r}")
         if self.victim not in ("last_joined", "fewest_pages"):
             raise ValueError(f"unknown victim rule {self.victim!r}")
+
+    def estimate_cost(self, prompt_len: int, generated: int,
+                      swap_bytes: int) -> Tuple[float, float]:
+        """Modeled (requeue_us, swap_us) for evicting + resuming one
+        victim with `prompt_len` prompt tokens, `generated` tokens
+        emitted so far, and `swap_bytes` §5.1 bytes resident in its
+        pages (both directions are charged — gather out, scatter in)."""
+        requeue = self.prefill_tok_us * prompt_len \
+            + self.replay_tok_us * max(generated - 1, 0)
+        swap = 2.0 * swap_bytes / (self.swap_gb_s * 1e3)   # bytes -> us
+        return requeue, swap
+
+    def resolve(self, prompt_len: int, generated: int,
+                swap_bytes: int) -> str:
+        """The concrete mode for one victim ("requeue" or "swap")."""
+        if self.preempt != "auto":
+            return self.preempt
+        requeue, swap = self.estimate_cost(prompt_len, generated,
+                                           swap_bytes)
+        return "requeue" if requeue <= swap else "swap"
 
 
 @dataclasses.dataclass
@@ -269,6 +303,12 @@ class _Slot:
     generated: int              # tokens emitted so far (tok0 counts)
     pages: List[int]            # physical pages owned by this sequence
     joined: int = 0             # admission sequence number (victim order)
+    replay: List[int] = dataclasses.field(default_factory=list)
+    # ^ chunked-mode requeue resume: already-emitted tokens still to be
+    #   fed (teacher-forced) through the regular decode steps once the
+    #   chunked re-prefill completes; outputs of those steps are
+    #   discarded (the tokens are already recorded), their cache writes
+    #   are the point. Empty for every other slot.
 
 
 @dataclasses.dataclass
@@ -315,7 +355,9 @@ class ContinuousBatchingEngine:
                  ctx: Optional[QuantCtx] = None, scales_groups=None, *,
                  page_size: int = 16, n_pages: int = 64,
                  max_active: int = 4, max_seq_len: int = 512,
-                 policy: Optional[SchedulerPolicy] = None):
+                 policy: Optional[SchedulerPolicy] = None,
+                 prefill: str = "sequential", chunk_size: int = 32,
+                 chunk_align: int = 8, chunk_seg: Optional[int] = None):
         if cache_cfg.layout != "sparq":
             raise ValueError("the paged engine stores packed §5.1 pages; "
                              "use --kv-cache sparq")
@@ -328,6 +370,8 @@ class ContinuousBatchingEngine:
         if max_seq_len % page_size:
             raise ValueError(f"max_seq_len {max_seq_len} must be a multiple "
                              f"of page_size {page_size}")
+        if prefill not in ("sequential", "chunked"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
         self.model = model
         self.cc = cache_cfg
         self.ctx = ctx
@@ -337,6 +381,25 @@ class ContinuousBatchingEngine:
         self.max_active = max_active
         self.n_blocks = max_seq_len // page_size
         self.policy = policy
+        self.prefill_mode = prefill
+        # host bytes one resident page actually moves on a swap round
+        # trip (for SchedulerPolicy "auto"): four int8 planes per layer
+        # (K/V x data/meta) — the same figure SwapStore's bytes_out/in
+        # counters measure, so the cost model and the reported stats
+        # agree. (On §5.1 hardware the packed planes would move
+        # kernels.ops.bytes_per_value instead, ~2.1x less for 5opt —
+        # fold that into swap_gb_s when modeling such a link.)
+        cfgm = model.cfg
+        n_layers = sum(count for _, count in model.groups_meta)
+        self._page_bytes = int(4 * n_layers * page_size * cfgm.n_kv_heads
+                               * cfgm.head_dim)
+        self._sched = None
+        if prefill == "chunked":
+            from repro.launch.prefill import PrefillScheduler
+            self._sched = PrefillScheduler(
+                model, ctx, scales_groups, chunk_size=chunk_size,
+                align=chunk_align, page_size=page_size,
+                n_slots=max_active, seg=chunk_seg)
         # requeue resume replays decode steps through a temporary
         # *contiguous* cache; pinning its fused-kernel tile to the page
         # size makes the replay reads bit-identical to the paged reads
@@ -409,10 +472,15 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------ trace
     @staticmethod
     def _snapshot(n_steps, allocator, slots, host_bt, host_pos, caches,
-                  queue, resume_q, swap) -> dict:
+                  queue, resume_q, swap, prefilling=(),
+                  replaying=()) -> dict:
         """Scheduler-state snapshot handed to `run(trace_hook=...)` before
         each traced decode step. Host fields are copies (safe to keep);
-        `caches` is the live device state for deep cross-checks."""
+        `caches` is the live device state for deep cross-checks.
+        `prefilling` lists slots mid-chunked-prefill (their device
+        seq_pos is the -1 inactive sentinel while host `pos` counts the
+        prompt tokens already written); `replaying` lists slots replaying
+        recorded tokens after a chunked requeue resume."""
         return {
             "step": n_steps,
             "n_pages": allocator.n_pages,
@@ -429,6 +497,8 @@ class ContinuousBatchingEngine:
             "swapped_rids": sorted(
                 rec.rid for rec in resume_q if rec.swapped),
             "swap_resident_bytes": swap.resident_bytes,
+            "prefilling": tuple(prefilling),
+            "replaying": tuple(replaying),
             "caches": caches,
         }
 
@@ -453,6 +523,9 @@ class ContinuousBatchingEngine:
         requests = [r if isinstance(r, Request) else Request(*r)
                     for r in requests]
         ps, NB = self.page_size, self.n_blocks
+        sched = self._sched
+        if sched is not None:
+            sched.reset()
         for i, r in enumerate(requests):
             need = len(r.tokens) + r.gen - 1
             if need > NB * ps or math.ceil(need / ps) > self.n_pages:
@@ -532,10 +605,25 @@ class ContinuousBatchingEngine:
         def preempt(s: int):
             nonlocal caches
             st = slots[s]
-            toks = emitted_toks(st.rid)
-            assert len(toks) == st.generated, (st.rid, len(toks))
+            mid_prefill = sched is not None and sched.has(s)
+            toks = emitted_toks(st.rid) if st.rid in first_tok else []
+            assert mid_prefill or len(toks) == st.generated, \
+                (st.rid, len(toks))
+            # swap needs the victim's pages to hold its *complete* cache:
+            # a slot mid-chunked-prefill or mid-replay has partial pages
+            # only, so it always requeues (nothing but prompt recompute
+            # is lost); otherwise the policy decides — "auto" from the
+            # modeled recompute-vs-bytes crossover per victim.
+            if mid_prefill or st.replay or not toks:
+                mode = "requeue"
+            else:
+                mode = self.policy.resolve(
+                    len(requests[st.rid].tokens), st.generated,
+                    len(st.pages) * self._page_bytes)
+            if mid_prefill:
+                sched.cancel(s)
             rec = _Preempted(rid=st.rid, req=requests[st.rid], toks=toks,
-                             swapped=self.policy.preempt == "swap")
+                             swapped=mode == "swap")
             if rec.swapped:
                 pages_dev = jnp.asarray(st.pages, jnp.int32)
                 planes = [self._gather(c, jnp.int32(s), pages_dev)
@@ -566,6 +654,27 @@ class ContinuousBatchingEngine:
             host_bt[s, :len(pages)] = pages
             host_pos[s] = pos
 
+        def bind_prefilling(s: int, rid: int, req: Request, *,
+                            recorded=()):
+            """Bind a slot whose prompt will stream through the chunked
+            prefill path: no pages yet (granted chunk by chunk), host
+            position 0 (prompt tokens written so far), device seq_pos
+            stays -1 so interleaved decode steps treat it as inactive.
+            `recorded` (requeue resume) is the victim's already-emitted
+            token list: the chunk program's tok0 is asserted against
+            recorded[0] and the rest replays teacher-forced through the
+            ordinary decode steps once the prompt completes."""
+            nonlocal join_seq
+            recorded = list(recorded)
+            slots[s] = _Slot(rid=rid, target=req.gen,
+                             generated=len(recorded), pages=[],
+                             joined=join_seq, replay=recorded[1:])
+            join_seq += 1
+            host_bt[s] = -1
+            host_pos[s] = 0
+            sched.add(s, rid, req.tokens,
+                      expect_tok0=recorded[0] if recorded else None)
+
         def resume(s: int, rec: _Preempted):
             """Rebuild a preempted sequence in slot s. Caller guarantees
             the allocator holds enough pages (incl. the growth page when
@@ -583,6 +692,20 @@ class ContinuousBatchingEngine:
                     jnp.int32(s), pages_dev, jnp.int32(pos))
                     for c, pl in zip(caches, planes_np)]
                 jax.block_until_ready(caches[0].seq_pos)
+            elif sched is not None:
+                # chunked requeue: the prompt re-prefills through the
+                # chunked path (pages granted chunk by chunk, interleaved
+                # with decode) and the emitted tokens replay teacher-
+                # forced through the regular decode steps — same traced
+                # programs that produced the original bytes, so the
+                # rebuilt cache is bit-identical, with no per-length
+                # retrace and no contiguous staging cache.
+                bind_prefilling(s, rec.rid, rec.req, recorded=rec.toks)
+                t_resume += time.time() - t0
+                if progress:
+                    print(f"[resume] rid={rec.rid} slot={s} chunked "
+                          f"re-prefill queued ({len(rec.toks)} recorded)")
+                return
             else:                               # requeue: recompute
                 L, done = len(rec.req.tokens), len(rec.toks)
                 pos = L + done - 1
@@ -623,7 +746,28 @@ class ContinuousBatchingEngine:
                 st = slots[s]
                 if st is None or st.generated >= st.target:
                     continue
+                if sched is not None and sched.has(s):
+                    continue        # mid-prefill: pages granted per chunk
                 if host_bt[s, host_pos[s] // ps] < 0:
+                    debt += 1
+            return debt
+
+        def prefill_debt() -> int:
+            """Pages the partially-prefilled sequences still need to
+            finish their prompts — plus, as at sequential admission, the
+            first boundary-growth page of any whose prompt ends exactly
+            on a block boundary (its first decode write needs a fresh
+            page the moment prefill completes). Charged by the admission
+            watermark so a burst of new admissions cannot starve
+            in-flight prefills or thrash them into preemption at their
+            very first decode step (the chunked counterpart of reserving
+            prompt pages up front)."""
+            if sched is None:
+                return 0
+            debt = 0
+            for j in sched.jobs:
+                debt += sched.pages_outstanding(j.slot, host_bt)
+                if slots[j.slot].target > 1 and len(j.tokens) % ps == 0:
                     debt += 1
             return debt
 
@@ -631,9 +775,16 @@ class ContinuousBatchingEngine:
             """Pages a resume must find free: the restored pages plus the
             growth page when the next write crosses into a new block —
             reserving it up front keeps a fresh resume from being
-            immediately re-preempted by its own growth."""
+            immediately re-preempted by its own growth. (In chunked mode
+            a requeue resume allocates lazily, chunk by chunk; the same
+            figure then acts as the admission watermark so the resume
+            cannot start into guaranteed starvation.)"""
             if rec.swapped:
                 nbp, pos = swap.n_pages(rec.rid), swap.pos(rec.rid)
+            elif not rec.toks:          # mid-prefill victim: whole prompt
+                L = len(rec.req.tokens)
+                return math.ceil(L / ps) + (
+                    1 if rec.req.gen > 1 and L % ps == 0 else 0)
             else:
                 pos = len(rec.req.tokens) + len(rec.toks) - 1
                 nbp = math.ceil(pos / ps)
@@ -672,7 +823,7 @@ class ContinuousBatchingEngine:
                 if resume_q:
                     rec = resume_q[0]
                     if allocator.free_count < resume_need(rec) \
-                            + growth_debt():
+                            + growth_debt() + prefill_debt():
                         break                   # wait for evictions
                     resume_q.pop(0)
                     resume(s, rec)
@@ -682,13 +833,26 @@ class ContinuousBatchingEngine:
                 nbp = math.ceil(L / ps)
                 # watermark: prompt pages, plus this request's own first
                 # growth page when its prompt ends on a block boundary,
-                # plus the running sequences' growth debt
+                # plus the running sequences' growth debt, plus the pages
+                # partially-prefilled sequences still need (chunked mode)
                 own = 1 if (req.gen > 1 and L % ps == 0) else 0
-                if allocator.free_count < nbp + own + growth_debt():
+                if allocator.free_count < nbp + own + growth_debt() \
+                        + prefill_debt():
                     if not any(slots):
                         allocator.alloc(nbp + own)  # raises PoolExhausted
                     break                       # wait for evictions
                 queue.pop(0)
+                if sched is not None:
+                    # chunked admission is a host-side bind only: pages
+                    # are granted chunk by chunk and the prompt streams
+                    # through the shared chunk program interleaved with
+                    # decode steps — a long prompt no longer stalls the
+                    # loop for its whole length
+                    bind_prefilling(s, rid, req)
+                    if progress:
+                        print(f"[admit] rid={rid} slot={s} prompt={L} "
+                              f"(chunked prefill queued)")
+                    continue
                 t0 = time.time()
                 pages = allocator.alloc(nbp)
                 tmp = self.model.init_cache(1, nbp * ps, cache_cfg=self.cc)
@@ -714,6 +878,65 @@ class ContinuousBatchingEngine:
                           f"{len(req.tokens)} pages={pages}")
             peak_pages = max(peak_pages, allocator.used_count)
 
+            # ---- chunked prefill: run one fixed-shape chunk of the
+            # packed prompt stream (if any prompts are pending), then
+            # fall through to the decode step — admission cost is
+            # amortized across the decode loop instead of blocking it.
+            chunk_ran = False
+            if sched is not None and sched.pending:
+                def prefill_budget() -> int:
+                    """Pages prefill may take right now: the free count
+                    minus the decode growth-debt watermark — a prefill
+                    chunk may not take the page a running sequence needs
+                    for its very next write (that would force a
+                    preemption in the same iteration)."""
+                    return max(allocator.free_count - growth_debt(), 0)
+
+                def grant(slot_want: int, blocks: List[int]) -> None:
+                    """Allocate pages for `blocks` (ascending logical
+                    blocks) of a mid-prefill slot; the scheduler sized
+                    the request to the budget, so it always succeeds."""
+                    for b in blocks:
+                        (pg,) = allocator.alloc(1)
+                        slots[slot_want].pages.append(pg)
+                        host_bt[slot_want, b] = pg
+
+                plan = sched.plan(prefill_budget, grant, host_bt)
+                if plan is not None:
+                    bt_dev = jnp.asarray(host_bt, jnp.int32)
+                    caches = [dataclasses.replace(
+                        c, block_table=jnp.broadcast_to(
+                            bt_dev, c.block_table.shape))
+                        for c in caches]
+                    spa = np.full((S,), -1, np.int64)
+                    for s2 in range(S):
+                        if slots[s2] is not None and not sched.has(s2):
+                            spa[s2] = host_pos[s2]
+                    for s2, _, _ in plan.completed:
+                        spa[s2] = host_pos[s2] + plan.advanced[s2]
+                    t0 = time.time()
+                    am, caches = sched.run(params, caches, plan, spa)
+                    jax.block_until_ready(am)
+                    t_prefill += time.time() - t0
+                    chunk_ran = True
+                    for s2, n in plan.advanced.items():
+                        host_pos[s2] += n
+                    for s2, rid2, expect in plan.completed:
+                        t_c = am[s2]
+                        if expect is not None:
+                            assert int(np.asarray(t_c)) == expect, \
+                                "chunked re-prefill diverged from the " \
+                                "recorded first token — greedy decode " \
+                                "is no longer deterministic"
+                        else:
+                            first_tok[rid2] = t_c
+                            slots[s2].generated = 1
+                        tok = tok.at[s2, 0].set(t_c)
+                        if progress:
+                            print(f"[prefill] rid={rid2} slot={s2} "
+                                  f"complete at pos {host_pos[s2]}")
+                    peak_pages = max(peak_pages, allocator.used_count)
+
             if not any(slots):
                 if resume_q or arrived():
                     continue                    # a resume/admit now fits
@@ -732,6 +955,8 @@ class ContinuousBatchingEngine:
             for s in range(S):
                 if slots[s] is None or slots[s].generated >= slots[s].target:
                     continue
+                if sched is not None and sched.has(s):
+                    continue        # mid-prefill: pages granted per chunk
                 blk = host_pos[s] // ps
                 if host_bt[s, blk] >= 0:
                     continue
@@ -776,15 +1001,42 @@ class ContinuousBatchingEngine:
             # ---- one traced decode step over every slot. Slots that just
             # hit their target still ride along (their masked write lands
             # in their own pages, freed at eviction) but emit no token.
+            # Mid-prefill slots ride along inactive (device seq_pos -1:
+            # trash write, masked attention, no advance); replaying slots
+            # (chunked requeue resume) consume their recorded tokens
+            # teacher-forced — the step writes their K/V, the emitted
+            # token is discarded (it is already recorded).
+            prefilling = tuple(s for s in range(S)
+                               if sched is not None and sched.has(s))
+            replaying = tuple(s for s in range(S)
+                              if slots[s] is not None and slots[s].replay
+                              and s not in prefilling)
             active = tuple((s, slots[s].rid) for s in range(S)
                            if slots[s] is not None
-                           and slots[s].generated < slots[s].target)
-            if not active:
+                           and slots[s].generated < slots[s].target
+                           and s not in prefilling and s not in replaying)
+            if not active and not replaying:
+                if sched is not None and sched.pending and not chunk_ran:
+                    # every live slot is a stalled prefill: no decode
+                    # step can run and no chunk could take a page.
+                    # Reclaim by preempting a victim (policy permitting)
+                    # so the oldest job progresses next iteration.
+                    first_slot = sched.jobs[0].slot
+                    victim = select_victim(exclude=(first_slot,))
+                    if victim is None:
+                        check_page_accounting()
+                        raise paging.PoolExhausted(
+                            f"page pool exhausted mid-prefill of slot "
+                            f"{first_slot} and no victim left to preempt "
+                            f"— grow --n-pages or enable --preempt "
+                            f"requeue|swap")
+                    preempt(victim)
                 continue                        # every slot done: evict
             if trace_hook is not None:
                 trace_hook(self._snapshot(
                     n_steps, allocator, slots, host_bt, host_pos, caches,
-                    queue, resume_q, swap))
+                    queue, resume_q, swap, prefilling=prefilling,
+                    replaying=replaying))
             pos_dev = caches[0].seq_pos[0]      # [S]; host_pos for active
             tok, caches = self._step(params, tok, caches, pos_dev)
             n_steps += 1
@@ -793,6 +1045,10 @@ class ContinuousBatchingEngine:
             for s, _ in active:
                 slots[s].generated += 1
                 host_pos[s] += 1
+            for s in replaying:
+                host_pos[s] += 1
+                tok = tok.at[s, 0].set(slots[s].replay.pop(0))
+                counters["replay_steps"] += 1
 
         jax.block_until_ready(tok)
         t_total = time.time() - t_run0
@@ -817,6 +1073,11 @@ class ContinuousBatchingEngine:
         total_tokens = sum(len(r.tokens) + r.gen - 1 for r in requests)
         stats = {
             "prefill_s": t_prefill,
+            "prefill_mode": self.prefill_mode,
+            "prefill_chunks": sched.chunks_run if sched is not None else 0,
+            "prefill_compile_count":
+                sched.compile_count if sched is not None else None,
+            "run_s": t_total,
             "resume_s": t_resume,
             "decode_s": decode_s,
             "decode_steps": n_steps,
@@ -866,12 +1127,31 @@ def main(argv=None):
     ap.add_argument("--max-active", type=int, default=0,
                     help="paged engine: concurrent sequence slots "
                          "(default: --batch)")
-    ap.add_argument("--preempt", choices=("off", "requeue", "swap"),
+    ap.add_argument("--prefill", choices=("sequential", "chunked"),
+                    default="sequential",
+                    help="paged engine admission: sequential (one prompt "
+                         "at a time, shape-specialized jit per length) or "
+                         "chunked (ragged prompts packed into a fixed-"
+                         "shape token stream, one jitted chunk program "
+                         "for every length, §5.1 pages written directly)")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="chunked prefill: stream tokens per chunk")
+    ap.add_argument("--chunk-align", type=int, default=8,
+                    help="chunked prefill: query-tile alignment of each "
+                         "sequence's run inside the stream")
+    ap.add_argument("--chunk-seg", type=int, default=0,
+                    help="chunked prefill: segment quantum (prompt split "
+                         "granularity; 0 = chunk size). Prompts up to one "
+                         "segment admit bit-identically to sequential; "
+                         "longer prompts attend earlier segments through "
+                         "their packed pages")
+    ap.add_argument("--preempt", choices=("off", "requeue", "swap", "auto"),
                     default="off",
                     help="paged engine: on decode-time pool exhaustion, "
                          "preempt victims — requeue (drop pages, replay on "
-                         "resume) or swap (packed pages to host, verbatim "
-                         "restore); off raises PoolExhausted")
+                         "resume), swap (packed pages to host, verbatim "
+                         "restore), or auto (per-victim cost model: replay "
+                         "FLOPs vs swap bytes); off raises PoolExhausted")
     ap.add_argument("--victim", choices=("last_joined", "fewest_pages"),
                     default="last_joined",
                     help="paged engine: preemption victim selection")
@@ -937,7 +1217,10 @@ def main(argv=None):
             model, cache_cfg, ctx, scales,
             page_size=args.page_size, n_pages=n_pages,
             max_active=args.max_active or args.batch,
-            max_seq_len=max_seq, policy=policy)
+            max_seq_len=max_seq, policy=policy,
+            prefill=args.prefill, chunk_size=args.chunk_size,
+            chunk_align=args.chunk_align,
+            chunk_seg=args.chunk_seg or None)
         reqs = [Request(np.asarray(batch["tokens"][b]), args.gen)
                 for b in range(args.batch)]
         if not args.no_warmup:

@@ -224,15 +224,31 @@ def cache_update(cache: CacheStore, k_new, v_new) -> CacheStore:
 def attention_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
                     positions: jnp.ndarray,
                     cache: Optional[CacheStore] = None,
-                    mode: str = "train",     # train | prefill | decode
+                    mode: str = "train",  # train | prefill | decode |
+                                          # chunk_prefill
                     window: int = 0,
                     prefix_len: int = 0,
-                    ctx: Optional[QuantCtx] = None):
+                    ctx: Optional[QuantCtx] = None,
+                    chunk=None):
     """Full attention sub-block: qkv -> attend -> out proj.
-    Returns (out, new_cache)."""
+    Returns (out, new_cache).
+
+    mode "chunk_prefill" (paged caches only): x is one fixed-shape chunk
+    of the packed ragged prompt stream (`chunk`: models.paging.ChunkMeta,
+    positions = chunk.pos). The chunk's K/V quantize straight into the
+    sequence's pages (PagedCacheStore.write_chunk — no staging cache) and
+    attention runs segment-masked over the chunk plus each sequence's
+    already-written pages (kernels.ops.sparq_chunked_prefill_attention).
+    """
     q, k, v = qkv_proj(params, x, cfg, positions, ctx)
     new_cache = None
-    if mode == "decode":
+    if mode == "chunk_prefill":
+        from repro.models.paging import chunked_prefill_attention
+        assert cache is not None and chunk is not None
+        new_cache = cache.write_chunk(k[0], v[0], chunk)
+        out = chunked_prefill_attention(q, k[0], v[0], new_cache, chunk,
+                                        window=window)
+    elif mode == "decode":
         assert cache is not None
         new_cache = cache_update(cache, k, v)
         out = decode_attention(q, new_cache, window=window)

@@ -143,6 +143,34 @@ class Model:
         x = norm(params["final_norm"], x[:, -1:], cfg.norm_type, cfg.norm_eps)
         return self._head(params, x)[:, 0], caches
 
+    def prefill_chunk(self, params, tokens, caches, chunk, last_rows,
+                      ctx: Optional[QuantCtx] = None, scales_groups=None):
+        """One chunk of the packed ragged-prefill token stream (paged
+        caches, standard-KV stacks only). tokens [1, C] in stream order;
+        `chunk` is a models.paging.ChunkMeta (per-token slot/position
+        metadata, per-slot start positions, post-chunk seq_pos). Every
+        layer quantizes the chunk's K/V straight into §5.1 pages and
+        attends over chunk + already-written pages — one traced program
+        covers every prompt length and join pattern, so admission never
+        retraces (the PrefillScheduler jits exactly this function once).
+
+        `last_rows` [S] int32 names the stream row holding each slot's
+        final prompt token (-1 if the slot's prefill does not complete in
+        this chunk). Returns (tok0 [S] int32 — the greedy token at each
+        slot's last prompt row, garbage where last_rows < 0 — , caches)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg.dtype)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+        positions = chunk.pos[None, :]
+        x, caches, _ = tr.stack_apply(
+            self.groups_meta, params["blocks"], x, cfg, positions=positions,
+            caches=caches, mode="chunk_prefill", ctx=ctx,
+            scales_groups=scales_groups, chunk=chunk)
+        rows = x[0, jnp.maximum(last_rows, 0)]           # [S, d]
+        h = norm(params["final_norm"], rows, cfg.norm_type, cfg.norm_eps)
+        return jnp.argmax(self._head(params, h), -1).astype(jnp.int32), \
+            caches
+
     def decode_step(self, params, tokens, caches, pos,
                     ctx: Optional[QuantCtx] = None, scales_groups=None):
         """One token for every sequence. tokens [B,1]; pos: absolute

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,39 @@ from repro.models.cache import CacheConfig, CacheStore
 
 class PoolExhausted(RuntimeError):
     """Raised host-side (before tracing) when the page pool runs dry."""
+
+
+class ChunkMeta(NamedTuple):
+    """Per-chunk metadata for the chunked ragged prefill path.
+
+    A chunk is one fixed-shape slice of the packed token stream the
+    `PrefillScheduler` (launch.prefill) builds from ragged pending
+    prompts: every stream token carries its sequence slot and absolute
+    position, sequence runs are contiguous and aligned to the kernel's
+    query-tile size (derivable as C // tile_seq.shape[0]), and padding
+    tokens are seq_id == -1. All fields are device arrays (the ChunkMeta
+    is a pytree leaf-carrier traced through the jitted chunk program).
+
+      seq_id        [C] int32 — sequence slot per token (-1 = padding)
+      pos           [C] int32 — absolute prompt position per token
+      hist          [C] int32 — per-token history boundary (the token's
+                    segment start): attention reads packed pages for
+                    kpos < hist and the chunk's float K/V for
+                    kpos in [hist, pos]. Segment-granular packing makes
+                    this split — and hence every prompt's numerics —
+                    independent of how chunks were packed.
+      tile_seq      [C/bq] int32 — slot owning each query tile (-1 pad)
+      seq_pos_after [S] int32 — device seq_pos to install after the
+                    chunk's writes: the prompt length for slots whose
+                    prefill completes here, -1 for slots still mid-
+                    prefill (keeps them inactive for interleaved decode
+                    steps), and the current position for everyone else.
+    """
+    seq_id: jnp.ndarray
+    pos: jnp.ndarray
+    hist: jnp.ndarray
+    tile_seq: jnp.ndarray
+    seq_pos_after: jnp.ndarray
 
 
 class PageAllocator:
@@ -264,6 +297,70 @@ class PagedCacheStore:
             v_scale=jnp.where(active, v_scale, self.v_scale),
             seq_pos=jnp.where(active, pos + 1, pos))
 
+    def _resolve_chunk_scale(self, stored: jnp.ndarray, x: jnp.ndarray,
+                             s_safe: jnp.ndarray,
+                             first_seg: jnp.ndarray) -> jnp.ndarray:
+        """Per-sequence scale for a chunk write: frozen once calibrated
+        (> 0), else set from the dynamic range of this sequence's
+        *first-segment* tokens (`first_seg`: valid tokens with hist == 0)
+        — never from whatever later segments happened to share the
+        chunk, so the frozen scale is a function of (prompt, seg) alone
+        and identical under every stream packing (the §5.1
+        scale-freeze-at-first-write policy, applied at the segment
+        boundary). For a prompt that fits one segment this is exactly
+        the contiguous prefill's whole-prompt range — bit-identical
+        scale, hence bit-identical bytes. A sequence's first segment is
+        always its first chunk appearance (jobs advance in order), so a
+        chunk carrying only later segments finds `stored` already
+        frozen; slots with no first-segment tokens are untouched."""
+        tok_max = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 2))
+        tok_max = jnp.where(first_seg, tok_max, 0.0)
+        S = stored.shape[0]
+        seq_max = jnp.zeros((S,), jnp.float32).at[s_safe].max(tok_max)
+        dyn = jnp.maximum(seq_max, 1e-8) / self.codec.max_val
+        has = jnp.zeros((S,), bool).at[s_safe].max(first_seg)
+        return jnp.where(stored > 0, stored, jnp.where(has, dyn, stored))
+
+    def write_chunk(self, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                    meta: "ChunkMeta") -> "PagedCacheStore":
+        """Scatter one prefill chunk's K/V directly into the page pool.
+
+        k_new/v_new: float [C, KV, hd] — the chunk's freshly projected
+        K/V in stream order. Token i quantizes with its sequence's scale
+        (resolved per `_resolve_chunk_scale`) through the same §5.1 codec
+        as every other write path and lands at physical page
+        block_table[seq_id[i], pos[i] // ps], row pos[i] % ps — no
+        contiguous staging cache and no adopt_prefill copy. Padding
+        tokens and unallocated blocks write to the trash page. seq_pos is
+        replaced wholesale by meta.seq_pos_after (the engine computes it
+        host-side; mid-prefill slots stay at -1 so interleaved decode
+        steps treat them as inactive)."""
+        ps = self.page_size
+        trash = self.k_data.shape[0] - 1
+        sid = meta.seq_id
+        valid = sid >= 0
+        s_safe = jnp.maximum(sid, 0)
+        first_seg = valid & (meta.hist == 0)
+        k_scale = self._resolve_chunk_scale(self.k_scale, k_new,
+                                            s_safe, first_seg)
+        v_scale = self._resolve_chunk_scale(self.v_scale, v_new,
+                                            s_safe, first_seg)
+        kd, km = self._encode(k_new, k_scale[s_safe])
+        vd, vm = self._encode(v_new, v_scale[s_safe])
+        eff = jnp.maximum(meta.pos, 0)
+        blk = jnp.minimum(eff // ps, self.n_blocks - 1)
+        page = self.block_table[s_safe, blk]
+        page = jnp.where(valid & (page >= 0), page, trash)
+        off = eff % ps
+        return dataclasses.replace(
+            self,
+            k_data=self.k_data.at[page, off].set(kd),
+            k_meta=self.k_meta.at[page, off].set(km),
+            v_data=self.v_data.at[page, off].set(vd),
+            v_meta=self.v_meta.at[page, off].set(vm),
+            k_scale=k_scale, v_scale=v_scale,
+            seq_pos=meta.seq_pos_after)
+
 
 # ----------------------------------------------------------------------
 # attention read path
@@ -284,6 +381,31 @@ def paged_decode_attention(q: jnp.ndarray, store: PagedCacheStore, *,
         store.block_table, store.seq_pos - 1, window=window,
         impl=store.impl)
     return out.astype(q.dtype)
+
+
+def chunked_prefill_attention(q: jnp.ndarray, k_chunk: jnp.ndarray,
+                              v_chunk: jnp.ndarray, store: PagedCacheStore,
+                              meta: ChunkMeta, *,
+                              window: int = 0) -> jnp.ndarray:
+    """Ragged chunked-prefill attention for one layer. q [1, C, H, hd];
+    k_chunk/v_chunk [C, KV, hd] float (this chunk's own projections,
+    pre-quantization). Each stream token attends to its sequence's
+    already-written packed pages for kpos < meta.hist (its per-token
+    history boundary) plus the causally/segment-masked float window
+    [hist, pos] of the chunk itself — so calling this on the
+    post-`write_chunk` store is correct, and required: a token's earlier
+    *segments* may have been written by this very chunk program. Padding
+    rows return zeros."""
+    from repro.kernels.ops import sparq_chunked_prefill_attention
+    nt = meta.tile_seq.shape[0]
+    C = q.shape[1]
+    out = sparq_chunked_prefill_attention(
+        q[0], k_chunk, v_chunk,
+        store.k_data, store.k_meta, store.k_scale,
+        store.v_data, store.v_meta, store.v_scale,
+        store.block_table, meta.seq_id, meta.pos, meta.hist,
+        meta.tile_seq, window=window, impl=store.impl, bq=C // nt)
+    return out[None].astype(q.dtype)
 
 
 # ----------------------------------------------------------------------

@@ -196,8 +196,17 @@ def block_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig, kind: str, *,
                 mode: str = "train",
                 ctx: Optional[QuantCtx] = None,
                 prefix_len: int = 0,
-                enc_out: Optional[jnp.ndarray] = None):
-    """Returns (x, new_cache, aux) — aux carries MoE losses (or {})."""
+                enc_out: Optional[jnp.ndarray] = None,
+                chunk=None):
+    """Returns (x, new_cache, aux) — aux carries MoE losses (or {}).
+
+    mode "chunk_prefill" (standard-KV kinds over paged caches only):
+    x is one packed ragged-prompt chunk with `chunk` ChunkMeta; the
+    attention sub-block writes §5.1 pages directly and attends
+    chunk+pages (see attention.attention_block)."""
+    if chunk is not None and kind not in ("dense", "moe"):
+        raise ValueError(f"chunked prefill serves standard-KV attention "
+                         f"kinds only (got {kind!r})")
     from repro.distributed.sharding import constrain_batch
     aux = {}
     nt, eps = cfg.norm_type, cfg.norm_eps
@@ -234,12 +243,17 @@ def block_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig, kind: str, *,
             else:
                 o, new_cache = attn_mod.attention_block(
                     params["attn"], h, cfg, positions=positions, cache=cache,
-                    mode=mode, window=window, prefix_len=prefix_len, ctx=ctx)
+                    mode=mode, window=window, prefix_len=prefix_len, ctx=ctx,
+                    chunk=chunk)
         x = _res(x, o)
         h = constrain_batch(norm(params["ln2"], x, nt, eps))
         if kind == "moe":
-            o, aux = moe_mod.moe_apply(params["moe"], h, cfg, ctx,
-                                       exact_capacity=(mode == "decode"))
+            # chunk_prefill mixes tokens of several sequences in one
+            # stream: exact capacity (like decode) so capacity-based
+            # dropping can never couple one prompt's routing to another's
+            o, aux = moe_mod.moe_apply(
+                params["moe"], h, cfg, ctx,
+                exact_capacity=(mode in ("decode", "chunk_prefill")))
         else:
             o = ffn_mod.ffn_apply(params["ffn"], h, cfg.mlp_type
                                   if kind != "rg_attn" else "geglu", ctx)
@@ -393,9 +407,12 @@ def stack_apply(groups_meta: list, blocks: list, x: jnp.ndarray,
                 ctx: Optional[QuantCtx] = None,
                 scales_groups: Optional[list] = None,
                 prefix_len: int = 0,
-                enc_out: Optional[jnp.ndarray] = None):
+                enc_out: Optional[jnp.ndarray] = None,
+                chunk=None):
     """Apply every layer group with lax.scan. groups_meta is the static
     [(kind, count)] list; blocks the parallel stacked-params list.
+    `chunk` (ChunkMeta, mode "chunk_prefill" only) rides along as a scan
+    constant — the same stream metadata serves every layer.
     Returns (x, new_caches, aux)."""
     new_caches = []
     lb = jnp.float32(0)
@@ -413,7 +430,8 @@ def stack_apply(groups_meta: list, blocks: list, x: jnp.ndarray,
                 bctx = dataclasses.replace(ctx, scales=scales_l)
             h, new_cache_l, aux = block_apply(
                 p_l, h, cfg, kind, positions=positions, cache=cache_l,
-                mode=mode, ctx=bctx, prefix_len=prefix_len, enc_out=enc_out)
+                mode=mode, ctx=bctx, prefix_len=prefix_len, enc_out=enc_out,
+                chunk=chunk)
             h = constrain(h)  # pin residual stream (DP/SP) at layer boundary
             lb_a += aux.get("lb_loss", 0.0)
             zl_a += aux.get("z_loss", 0.0)

@@ -209,24 +209,38 @@ class InvariantChecker:
             np.testing.assert_array_equal(bt_dev, snap["host_bt"])
             pos_dev = np.asarray(snap["caches"][0].seq_pos[0])
             for s in range(pos_dev.shape[0]):
+                if s in snap.get("prefilling", ()):
+                    # mid-chunked-prefill: host tracks written prompt
+                    # tokens, the device holds the -1 inactive sentinel
+                    # so interleaved decode steps can't touch the slot
+                    assert pos_dev[s] == -1, \
+                        f"mid-prefill slot {s} active on device"
+                    continue
                 want = slots[s]["pos"] if s in slots else -1
                 assert pos_dev[s] == want, f"slot {s} position drift"
         self.steps += 1
 
 
 # pool sizes: generous (no preemption expected), tight, and heavily
-# oversubscribed (barely above the largest single request)
-@pytest.mark.parametrize("n_pages,policy_mode,expect_preempt", [
-    (24, "requeue", False),
-    (8, "requeue", True),
-    (8, "swap", True),
-    (6, "requeue", True),
-    (6, "swap", True),
+# oversubscribed (barely above the largest single request); the chunked
+# rows replay the same trace through the chunked ragged-prefill path
+# (prompts fit one segment, so tokens must still match the oracle
+# exactly, and the same per-step invariants must hold around mid-
+# prefill slots and in-band replay)
+@pytest.mark.parametrize("n_pages,policy_mode,prefill,expect_preempt", [
+    (24, "requeue", "sequential", False),
+    (8, "requeue", "sequential", True),
+    (8, "swap", "sequential", True),
+    (6, "requeue", "sequential", True),
+    (6, "swap", "sequential", True),
+    (8, "requeue", "chunked", True),
+    (6, "swap", "chunked", True),
 ], ids=["pool24-requeue", "pool8-requeue", "pool8-swap",
-        "pool6-requeue", "pool6-swap"])
+        "pool6-requeue", "pool6-swap",
+        "pool8-requeue-chunked", "pool6-swap-chunked"])
 def test_trace_invariants_and_token_equality(tiny_lm, trace, oracle,
                                              n_pages, policy_mode,
-                                             expect_preempt):
+                                             prefill, expect_preempt):
     """Replay the seeded trace at one pool size/policy: every step holds
     the page-accounting invariants and the end state reproduces the
     uncontended contiguous tokens exactly."""
@@ -237,17 +251,27 @@ def test_trace_invariants_and_token_equality(tiny_lm, trace, oracle,
     eng = ContinuousBatchingEngine(
         model, _cc(), page_size=PS, n_pages=n_pages, max_active=3,
         max_seq_len=24,
-        policy=SchedulerPolicy(preempt=policy_mode, victim="last_joined"))
+        policy=SchedulerPolicy(preempt=policy_mode, victim="last_joined"),
+        prefill=prefill, chunk_size=16, chunk_align=4)
     check = InvariantChecker(ps=PS)
     results, stats = eng.run(params, trace, trace_hook=check)
     assert check.steps == stats["decode_steps"] > 0
+    if prefill == "chunked":
+        assert stats["prefill_compile_count"] == 1
+        assert stats["prefill_chunks"] > 0
     if expect_preempt:
         assert stats["preemptions"] > 0, \
             "trace did not stress the pool — tighten it"
         assert check.max_owned <= n_pages
         if policy_mode == "swap":
             assert stats["swap_bytes_out"] == stats["swap_bytes_in"] > 0
-            assert stats["preempt_swap"] == stats["preemptions"]
+            if prefill == "sequential":
+                assert stats["preempt_swap"] == stats["preemptions"]
+            else:
+                # chunked: a victim caught mid-prefill or mid-replay has
+                # only a partial cache in its pages, so it requeues even
+                # under the swap policy; complete victims still swap
+                assert stats["preempt_swap"] > 0
         else:
             assert stats["replay_steps"] > 0
             assert stats["swap_bytes_out"] == 0
