@@ -8,8 +8,11 @@ layout), paged_serving writes BENCH_paged.json (paged vs contiguous
 engine tok/s + pool utilization under a ragged continuous-batching
 workload), and oversubscribed_serving writes BENCH_preempt.json (tok/s +
 preemption counts + swap traffic as the pool shrinks below the working
-set, under both preemption policies) so the serving-perf trajectory
-accumulates across PRs.
+set, under both preemption policies), prefill_saturation writes
+BENCH_prefill.json (sequential vs chunked admission throughput), and
+shared_prefix writes BENCH_prefix.json (prefix-cache off vs on under a
+75%-shared-prefix workload) so the serving-perf trajectory accumulates
+across PRs.
 """
 from __future__ import annotations
 
@@ -327,12 +330,136 @@ def prefill_saturation_rows(out_json: str = "BENCH_prefill.json",
     return rows
 
 
+def shared_prefix_rows(out_json: str = "BENCH_prefix.json",
+                       impls: tuple = ("reference",)) -> list:
+    """Shared-prefix page reuse -> BENCH_prefix.json.
+
+    The workload is the few-shot/system-prompt regime: 16 requests with
+    64-token prompts sharing a common 48-token prefix (75%), distinct
+    16-token tails, and two exact duplicates of the first prompt (the
+    full-prompt-match path, whose segment-floored resume point lands
+    mid-page and exercises copy-on-write). Arrivals are staggered every
+    other decode step; chunked prefill with chunk_seg 8 < page_size 16
+    (prefix quantum lcm = 16 tokens / 1 page).
+
+    The trace runs twice per figure — cold (compiling) and steady — with
+    the prefix cache off and on, same engine geometry otherwise. Greedy
+    tokens are asserted identical: shared pages are byte-identical to
+    what each sequence would have written (scheduling invariance +
+    adopted frozen scales), so the cache changes cost, not output.
+    Reported per mode: cold/steady admission tok/s over the *full*
+    prompt token count (cache hits shrink prefill work, not the
+    denominator), prefix hit rate, pages shared, CoW copies, and peak
+    pool pages — admission cost and peak footprint should both drop
+    roughly by the sharing factor.
+    """
+    import numpy as np
+
+    from repro.core.sparq import SparqConfig
+    from repro.launch import serve as serve_mod
+    from repro.models.cache import CacheConfig
+    from repro.models.model import Model
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_reduced_config
+
+    cfg_m = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False)
+    model = Model(cfg_m)
+    params = model.init_params(jax.random.PRNGKey(0))
+    impl = impls[0]
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True), impl=impl)
+
+    rng = np.random.default_rng(7)
+    ps, S = 16, 4
+    shared = rng.integers(0, cfg_m.vocab_size, (48,))   # 75% of 64
+    prompts = [np.concatenate(
+        [shared, rng.integers(0, cfg_m.vocab_size, (16,))])
+        for _ in range(14)]
+    # two exact duplicates of prompt 0, arriving while its donor is
+    # still live: full-prompt matches -> mid-page resume -> CoW
+    prompts = [prompts[0], prompts[0].copy(), prompts[0].copy()] + \
+        prompts[1:]
+    gens = [int(rng.integers(8, 17)) for _ in prompts]
+    reqs = [serve_mod.Request(p, g, arrive_at=2 * i)
+            for i, (p, g) in enumerate(zip(prompts, gens))]
+    prompt_tokens = sum(len(p) for p in prompts)
+
+    def bench(prefix):
+        eng = serve_mod.ContinuousBatchingEngine(
+            model, cc, page_size=ps, n_pages=26, max_active=S,
+            max_seq_len=80, prefill="chunked", chunk_size=64,
+            chunk_align=8, chunk_seg=8, prefix_cache=prefix)
+        t0 = time.time()
+        results, stats = eng.run(params, reqs)       # cold: compiles
+        cold_s = time.time() - t0
+        _, stats2 = eng.run(params, reqs)            # steady: warm
+        blob = {
+            "cold_run_s": round(cold_s, 3),
+            "cold_prefill_s": round(stats["prefill_s"], 4),
+            "cold_admit_tok_s": round(prompt_tokens / stats["prefill_s"],
+                                      1),
+            "steady_prefill_s": round(stats2["prefill_s"], 4),
+            "steady_admit_tok_s": round(
+                prompt_tokens / stats2["prefill_s"], 1),
+            "decode_tok_s": round(stats2["decode_tok_s"], 2),
+            "peak_pages_used": stats2["peak_pages_used"],
+        }
+        if prefix:
+            blob.update({
+                "prefix_hits": stats2["prefix_hits"],
+                "prefix_misses": stats2["prefix_misses"],
+                "prefix_hit_rate": round(stats2["prefix_hit_rate"], 3),
+                "prefix_hit_tokens": stats2["prefix_hit_tokens"],
+                "prefix_shared_pages": stats2["prefix_shared_pages"],
+                "cow_copies": stats2["cow_copies"],
+            })
+        return results, blob
+
+    res_off, blob_off = bench(False)
+    res_on, blob_on = bench(True)
+    for rid in res_off:                              # exactness is a given
+        np.testing.assert_array_equal(res_off[rid], res_on[rid])
+    assert blob_on["prefix_hits"] >= len(reqs) // 2, blob_on
+    assert blob_on["cow_copies"] >= 1, \
+        "duplicate prompts must exercise the copy-on-write path"
+    assert blob_on["peak_pages_used"] < blob_off["peak_pages_used"], \
+        "sharing must shrink the peak pool footprint"
+    blob = {"impl": impl, "requests": len(reqs),
+            "prompt_tokens": prompt_tokens,
+            "shared_prefix_tokens": int(len(shared)),
+            "shared_fraction": round(len(shared) / len(prompts[0]), 3),
+            "off": blob_off, "on": blob_on,
+            "steady_admit_speedup": round(
+                blob_on["steady_admit_tok_s"] /
+                blob_off["steady_admit_tok_s"], 2),
+            "peak_pages_ratio": round(
+                blob_on["peak_pages_used"] / blob_off["peak_pages_used"],
+                3)}
+    rows = []
+    for mode, b in (("off", blob_off), ("on", blob_on)):
+        cfg_name = f"tinyllama_reduced_prefix_{mode}"
+        rows += [(cfg_name, "steady_admit_tok_s", b["steady_admit_tok_s"]),
+                 (cfg_name, "peak_pages_used", b["peak_pages_used"])]
+    rows += [("tinyllama_reduced_prefix", "hit_rate",
+              blob_on["prefix_hit_rate"]),
+             ("tinyllama_reduced_prefix", "steady_admit_speedup",
+              blob["steady_admit_speedup"]),
+             ("tinyllama_reduced_prefix", "peak_pages_ratio",
+              blob["peak_pages_ratio"])]
+    with open(out_json, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_json}", file=sys.stderr)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
                     default="1,2,3,4,5,6,stats,serve,decode_cache,"
                             "paged_serving,oversubscribed_serving,"
-                            "prefill_saturation")
+                            "prefill_saturation,shared_prefix")
     ap.add_argument("--decode-impls", default="reference,pallas",
                     help="fused-decode impls to sweep in decode_cache "
                          "(pallas runs in interpret mode off-TPU: exact "
@@ -392,6 +519,10 @@ def main() -> None:
     if "prefill_saturation" in want:
         # admission burst: sequential vs chunked prefill -> BENCH_prefill
         common.emit("prefill_saturation", prefill_saturation_rows(
+            impls=tuple(args.decode_impls.split(","))))
+    if "shared_prefix" in want:
+        # shared-prefix page reuse: cache off vs on -> BENCH_prefix.json
+        common.emit("shared_prefix", shared_prefix_rows(
             impls=tuple(args.decode_impls.split(","))))
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 

@@ -16,6 +16,12 @@ preempts victims on decode-time exhaustion (requeue-and-replay, or
 packed-page swap to the host `SwapStore`) and resumes them bit-exactly:
 the oversubscribed runs must emit the very same tokens.
 
+A shared-prefix trace (six prompts with a common 32-token preamble plus
+one exact duplicate) then runs with `prefix_cache=True`: admissions
+adopt the cached prefix's refcounted pages and the donor's frozen
+scales, copy-on-write handles the duplicate's mid-page resume, and the
+tokens stay bit-identical to the cache-off run.
+
   PYTHONPATH=src python examples/serve_batched.py [--arch tinyllama-1.1b]
 """
 import argparse
@@ -113,6 +119,39 @@ def main():
               f"swap {stats_o['swap_bytes_out']/1e3:.1f} kB out — "
               f"tokens identical")
     print("preemption is token-invisible under both policies")
+
+    # ---- shared-prefix page reuse: few-shot-style traffic — six
+    # prompts sharing a 32-token prefix (distinct 16-token tails) plus
+    # one exact duplicate, arriving staggered. With --prefix-cache the
+    # engine refcounts pages, adopts the cached prefix (and the donor's
+    # frozen scales) on admission, copy-on-writes the duplicate's
+    # mid-page resume point, and chunk-prefills only the tails. Tokens
+    # must be bit-identical to the cache-off run of the same trace.
+    shared = rng.integers(0, cfg.vocab_size, (32,))
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, cfg.vocab_size, (16,))])
+               for _ in range(6)]
+    prompts.insert(1, prompts[0].copy())        # duplicate, donor live
+    reqs_p = [Request(p, 12, arrive_at=2 * i)
+              for i, p in enumerate(prompts)]
+    runs = {}
+    for prefix in (False, True):
+        eng = ContinuousBatchingEngine(
+            model, cc, page_size=PAGE, n_pages=POOL, max_active=SLOTS,
+            max_seq_len=80, prefill="chunked", chunk_size=48,
+            chunk_align=8, chunk_seg=8, prefix_cache=prefix)
+        runs[prefix] = eng.run(params, reqs_p)
+    results_p, stats_p = runs[True]
+    for rid in runs[False][0]:
+        np.testing.assert_array_equal(results_p[rid], runs[False][0][rid])
+    assert stats_p["prefix_hits"] > 0 and stats_p["cow_copies"] > 0
+    print(f"prefix cache: {stats_p['prefix_hits']} hits / "
+          f"{stats_p['prefix_misses']} misses, "
+          f"{stats_p['prefix_hit_tokens']} prompt tokens adopted, "
+          f"{stats_p['prefix_shared_pages']} pages shared, "
+          f"{stats_p['cow_copies']} CoW copies, peak pool "
+          f"{stats_p['peak_pages_used']} vs "
+          f"{runs[False][1]['peak_pages_used']} pages — tokens identical")
 
     # ---- everything at once: chunked admission over an oversubscribed
     # pool with the per-victim cost model picking requeue vs swap.

@@ -138,10 +138,20 @@ class PrefillScheduler:
         self.chunks_run = 0
 
     def add(self, slot: int, rid: int, tokens: np.ndarray,
-            expect_tok0: Optional[int] = None) -> None:
+            expect_tok0: Optional[int] = None, start: int = 0) -> None:
+        """Queue a prompt for chunked prefill. `start` > 0 (shared-prefix
+        admission) skips the prompt's first `start` tokens: their packed
+        pages are already in the slot's block table (adopted from the
+        prefix cache) and only the tail streams through the chunk
+        program. `start` must sit on a segment boundary — the packer's
+        history arithmetic (`hist = (pos // seg) * seg`) and the
+        segment-atomic placement rule both assume `done` always is."""
         assert not self.has(slot), f"slot {slot} already mid-prefill"
+        assert start % self.seg == 0, \
+            f"prefill start {start} must be a multiple of seg {self.seg}"
+        assert 0 <= start < len(tokens), (start, len(tokens))
         self.jobs.append(_Job(slot=slot, rid=rid,
-                              tokens=np.asarray(tokens),
+                              tokens=np.asarray(tokens), done=start,
                               expect_tok0=expect_tok0))
 
     def has(self, slot: int) -> bool:

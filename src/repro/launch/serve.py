@@ -357,7 +357,8 @@ class ContinuousBatchingEngine:
                  max_active: int = 4, max_seq_len: int = 512,
                  policy: Optional[SchedulerPolicy] = None,
                  prefill: str = "sequential", chunk_size: int = 32,
-                 chunk_align: int = 8, chunk_seg: Optional[int] = None):
+                 chunk_align: int = 8, chunk_seg: Optional[int] = None,
+                 prefix_cache: bool = False, prefix_min_pages: int = 1):
         if cache_cfg.layout != "sparq":
             raise ValueError("the paged engine stores packed §5.1 pages; "
                              "use --kv-cache sparq")
@@ -372,6 +373,14 @@ class ContinuousBatchingEngine:
                              f"of page_size {page_size}")
         if prefill not in ("sequential", "chunked"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
+        if prefix_cache and prefill != "chunked":
+            raise ValueError(
+                "--prefix-cache requires --prefill chunked: only the "
+                "chunked path's segment-granular scale freezing makes "
+                "packed prefill bytes a pure function of (prompt, seg) — "
+                "sequential admission freezes scales from the whole "
+                "prompt's range, so equal prefixes of different prompts "
+                "would not share bytes")
         self.model = model
         self.cc = cache_cfg
         self.ctx = ctx
@@ -400,6 +409,15 @@ class ContinuousBatchingEngine:
                 model, ctx, scales_groups, chunk_size=chunk_size,
                 align=chunk_align, page_size=page_size,
                 n_slots=max_active, seg=chunk_seg)
+        self.prefix_cache = prefix_cache
+        self.prefix_min_pages = max(1, prefix_min_pages)
+        # prefix-match granularity: whole pages (only fully-written,
+        # never-rewritten pages are shareable) AND whole prefill segments
+        # (the tail job must resume at a segment boundary, and the
+        # adopted scale is only the borrower's own would-be scale when
+        # the shared prefix covers the first segment)
+        self._quantum = math.lcm(page_size, self._sched.seg) \
+            if prefix_cache else 0
         # requeue resume replays decode steps through a temporary
         # *contiguous* cache; pinning its fused-kernel tile to the page
         # size makes the replay reads bit-identical to the paged reads
@@ -423,6 +441,11 @@ class ContinuousBatchingEngine:
         self._gather = jax.jit(paging.gather_slot_pages)
         self._restore = jax.jit(paging.restore_slot_pages,
                                 donate_argnums=(0,))
+        # shared-prefix admission: copy-on-write page duplication and
+        # donor-scale adoption (both rewrite the store in place)
+        self._copy_page = jax.jit(paging.copy_page, donate_argnums=(0,))
+        self._adopt_scales = jax.jit(paging.adopt_prefix_scales,
+                                     donate_argnums=(0,))
 
     # ------------------------------------------------------------ traced
     def _prefill_fn(self, params, batch, caches):
@@ -473,7 +496,7 @@ class ContinuousBatchingEngine:
     @staticmethod
     def _snapshot(n_steps, allocator, slots, host_bt, host_pos, caches,
                   queue, resume_q, swap, prefilling=(),
-                  replaying=()) -> dict:
+                  replaying=(), prefix=None) -> dict:
         """Scheduler-state snapshot handed to `run(trace_hook=...)` before
         each traced decode step. Host fields are copies (safe to keep);
         `caches` is the live device state for deep cross-checks.
@@ -499,6 +522,8 @@ class ContinuousBatchingEngine:
             "swap_resident_bytes": swap.resident_bytes,
             "prefilling": tuple(prefilling),
             "replaying": tuple(replaying),
+            "page_refcounts": allocator.refcounts,
+            "prefix": dict(prefix) if prefix is not None else None,
             "caches": caches,
         }
 
@@ -536,6 +561,13 @@ class ContinuousBatchingEngine:
                     f"pages — raise max_seq_len/n_pages")
 
         allocator = paging.PageAllocator(self.n_pages)
+        # fresh prefix index per run (the pool is fresh too): non-owning,
+        # invalidated page-by-page as refcounts fall to zero
+        index = paging.PrefixIndex(self._quantum, ps) \
+            if self.prefix_cache else None
+        pstats = {"prefix_hits": 0, "prefix_misses": 0,
+                  "prefix_hit_tokens": 0, "prefix_shared_pages": 0,
+                  "cow_copies": 0, "swap_refusals": 0}
         caches = self._init_stores()
         S = self.max_active
         tok = jnp.zeros((S, 1), jnp.int32)
@@ -560,7 +592,7 @@ class ContinuousBatchingEngine:
         # expose the live scheduling state for post-mortem tests: after a
         # PoolExhausted escapes, page accounting must still be consistent
         self._debug_state = {"allocator": allocator, "slots": slots,
-                             "swap": swap}
+                             "swap": swap, "prefix_index": index}
 
         # ---------------- preemption machinery (closures over run state)
         def emitted_toks(rid: int) -> List[int]:
@@ -577,10 +609,21 @@ class ContinuousBatchingEngine:
                 out.extend(int(toks_np[s_h, i]) for i, s_h in hits)
             return out
 
+        def drop_pages(pages: List[int]):
+            """Release one reference per page; prefix-index entries naming
+            any page that reached zero are invalidated (the page may be
+            reallocated with different bytes). Shared pages survive — the
+            other holders' references keep them resident and indexed."""
+            freed = allocator.release(pages)
+            if index is not None and freed:
+                index.invalidate(freed)
+
         def evict(s: int):
-            """Return a slot's pages to the free list and clear it."""
+            """Drop a slot's page references and clear it. Pages shared
+            with other sequences stay allocated (their refcount is still
+            positive); exclusively-owned ones return to the free list."""
             nonlocal caches
-            allocator.free(slots[s].pages)
+            drop_pages(slots[s].pages)
             caches = [self._evict(c, jnp.int32(s)) for c in caches]
             host_bt[s] = -1
             host_pos[s] = -1
@@ -620,6 +663,18 @@ class ContinuousBatchingEngine:
                 mode = self.policy.resolve(
                     len(requests[st.rid].tokens), st.generated,
                     len(st.pages) * self._page_bytes)
+            if mode == "swap" and any(allocator.refcount(p) > 1
+                                      for p in st.pages):
+                # the swap path refuses to park pages it does not
+                # exclusively own: parked planes must restore verbatim
+                # onto *fresh* pages later, but a shared page's other
+                # holders keep it live in the pool — parking it would
+                # fork the bytes (and freeing it would tear it out from
+                # under them). Requeue instead: release the references
+                # and rebuild by re-prefill, which may even re-match the
+                # still-resident shared prefix.
+                mode = "requeue"
+                pstats["swap_refusals"] += 1
             if mid_prefill:
                 sched.cancel(s)
             rec = _Preempted(rid=st.rid, req=requests[st.rid], toks=toks,
@@ -630,7 +685,7 @@ class ContinuousBatchingEngine:
                           for c in caches]
                 swap.put(st.rid, planes, int(host_pos[s]))
             caches = [self._evict(c, jnp.int32(s)) for c in caches]
-            allocator.free(st.pages)
+            drop_pages(st.pages)
             host_bt[s] = -1
             host_pos[s] = -1
             slots[s] = None
@@ -655,7 +710,7 @@ class ContinuousBatchingEngine:
             host_pos[s] = pos
 
         def bind_prefilling(s: int, rid: int, req: Request, *,
-                            recorded=()):
+                            recorded=(), start: int = 0, pages=()):
             """Bind a slot whose prompt will stream through the chunked
             prefill path: no pages yet (granted chunk by chunk), host
             position 0 (prompt tokens written so far), device seq_pos
@@ -663,17 +718,25 @@ class ContinuousBatchingEngine:
             `recorded` (requeue resume) is the victim's already-emitted
             token list: the chunk program's tok0 is asserted against
             recorded[0] and the rest replays teacher-forced through the
-            ordinary decode steps once the prompt completes."""
+            ordinary decode steps once the prompt completes.
+            `start`/`pages` (shared-prefix admission): prompt positions
+            [0, start) are already backed by `pages` — the adopted shared
+            run plus, when start is mid-page, its private copy-on-write
+            boundary page — so the prefill job begins at `start` and only
+            the tail streams through the chunk program."""
             nonlocal join_seq
             recorded = list(recorded)
+            pages = list(pages)
             slots[s] = _Slot(rid=rid, target=req.gen,
-                             generated=len(recorded), pages=[],
+                             generated=len(recorded), pages=pages,
                              joined=join_seq, replay=recorded[1:])
             join_seq += 1
             host_bt[s] = -1
-            host_pos[s] = 0
+            host_bt[s, :len(pages)] = pages
+            host_pos[s] = start
             sched.add(s, rid, req.tokens,
-                      expect_tok0=recorded[0] if recorded else None)
+                      expect_tok0=recorded[0] if recorded else None,
+                      start=start)
 
         def resume(s: int, rec: _Preempted):
             """Rebuild a preempted sequence in slot s. Caller guarantees
@@ -790,11 +853,55 @@ class ContinuousBatchingEngine:
                 nbp = math.ceil(pos / ps)
             return nbp + (1 if pos // ps >= nbp else 0)
 
+        def match_prefix(tokens):
+            """Longest usable cached prefix for a prompt. Returns None
+            (miss) or (T, shared, cow_src, scales): prompt positions
+            [0, T) come from the cache (T a segment boundary, so the
+            tail job resumes legally at T), `shared` are the whole pages
+            adopted for blocks [0, len(shared)), and `cow_src` names the
+            donor page to copy-on-write for the next block when T is
+            mid-page (a full-prompt match: at least the last segment
+            re-runs to produce the first output token, and its writes
+            must land in a private copy, never a shared page)."""
+            L = len(tokens)
+            M, pages, scales = index.match(tokens)
+            if M <= 0:
+                return None
+            # a full-prompt match still needs logits at position L-1:
+            # re-run the last segment (the packer resumes at segment
+            # boundaries only), attending to the cached pages below it
+            T = ((L - 1) // sched.seg) * sched.seg if M >= L else M
+            K = T // ps                 # whole shared pages adopted
+            if K < self.prefix_min_pages:
+                return None
+            cow_src = pages[K] if T % ps else None
+            return T, list(pages[:K]), cow_src, scales
+
+        def register_prefix(s: int, rid: int):
+            """Index a freshly prefilled prompt's whole-quantum prefix.
+            Called at chunked-prefill completion: every page below the
+            registered boundary is fully written and never written again
+            (decode writes land at positions >= the prompt length), and
+            the slot's scales are frozen. Re-registration after a resume
+            or of a shared prefix is a no-op for segments already
+            indexed (first donor wins)."""
+            toks = requests[rid].tokens
+            reg = (len(toks) // self._quantum) * self._quantum
+            if reg <= 0:
+                return
+            pages_reg = [int(p) for p in host_bt[s, :reg // ps]]
+            scales_reg = [(c.k_scale[:, s], c.v_scale[:, s])
+                          for c in caches]
+            index.insert(toks[:reg], pages_reg, scales_reg)
+
         def check_page_accounting():
             owned = [p for st in slots if st is not None for p in st.pages]
-            assert len(owned) == len(set(owned)), \
-                "page double-use across sequence slots"
-            assert allocator.free_count + len(owned) == self.n_pages, \
+            mult: Dict[int, int] = {}
+            for p in owned:
+                mult[p] = mult.get(p, 0) + 1
+            assert mult == allocator.refcounts, \
+                "page refcounts disagree with block-table references"
+            assert allocator.free_count + len(mult) == self.n_pages, \
                 "free-list conservation violated (pages leaked)"
             allocator.assert_consistent()
             for s, st in enumerate(slots):
@@ -805,6 +912,15 @@ class ContinuousBatchingEngine:
                     f"slot {s}: block table disagrees with owned pages"
                 assert 0 <= host_pos[s] <= len(st.pages) * ps, \
                     f"slot {s}: position outside its allocated blocks"
+                # a sequence never writes into a shared page: its next
+                # write position, when it lands mid-page, must target an
+                # exclusively-owned page (block boundaries target a page
+                # not yet allocated or freshly allocated at refcount 1)
+                blk = host_pos[s] // ps
+                if host_pos[s] % ps and blk < NB and host_bt[s, blk] >= 0:
+                    assert allocator.refcount(int(host_bt[s, blk])) == 1, \
+                        f"slot {s}: next write targets shared page " \
+                        f"{int(host_bt[s, blk])}"
 
         t_run0 = time.time()
         while True:
@@ -831,15 +947,23 @@ class ContinuousBatchingEngine:
                 rid, req = queue[0]
                 L = len(req.tokens)
                 nbp = math.ceil(L / ps)
-                # watermark: prompt pages, plus this request's own first
-                # growth page when its prompt ends on a block boundary,
-                # plus the running sequences' growth debt, plus the pages
-                # partially-prefilled sequences still need (chunked mode)
+                # shared-prefix match (chunked + --prefix-cache): blocks
+                # covered by adopted pages need no fresh allocation, so
+                # the watermark charges only the unshared tail. Matching
+                # takes no references — safe to re-match next iteration
+                # if the watermark defers admission.
+                hit = match_prefix(req.tokens) if index is not None \
+                    else None
+                nbp_fresh = nbp - (len(hit[1]) if hit is not None else 0)
+                # watermark: fresh prompt pages, plus this request's own
+                # first growth page when its prompt ends on a block
+                # boundary, plus the running sequences' growth debt, plus
+                # the pages partially-prefilled sequences still need
                 own = 1 if (req.gen > 1 and L % ps == 0) else 0
-                if allocator.free_count < nbp + own + growth_debt() \
+                if allocator.free_count < nbp_fresh + own + growth_debt() \
                         + prefill_debt():
                     if not any(slots):
-                        allocator.alloc(nbp + own)  # raises PoolExhausted
+                        allocator.alloc(nbp_fresh + own)  # PoolExhausted
                     break                       # wait for evictions
                 queue.pop(0)
                 if sched is not None:
@@ -848,6 +972,41 @@ class ContinuousBatchingEngine:
                     # through the shared chunk program interleaved with
                     # decode steps — a long prompt no longer stalls the
                     # loop for its whole length
+                    if hit is not None:
+                        T, shared, cow_src, sc = hit
+                        allocator.share(shared)
+                        hit_pages = list(shared)
+                        if cow_src is not None:
+                            # the tail resumes mid-page: duplicate the
+                            # donor's boundary page so the tail chunk
+                            # rewrites a private copy (rows below T stay
+                            # bit-identical; rows at/above are overwritten)
+                            (pg,) = allocator.alloc(1)
+                            caches = [self._copy_page(
+                                c, jnp.int32(cow_src), jnp.int32(pg))
+                                for c in caches]
+                            hit_pages.append(pg)
+                            pstats["cow_copies"] += 1
+                        # donor scales must be installed before the tail
+                        # chunk runs: the tail carries no first-segment
+                        # tokens, so nothing else would calibrate them
+                        caches = [self._adopt_scales(
+                            c, jnp.int32(s), k_sc, v_sc)
+                            for c, (k_sc, v_sc) in zip(caches, sc)]
+                        bind_prefilling(s, rid, req, start=T,
+                                        pages=hit_pages)
+                        pstats["prefix_hits"] += 1
+                        pstats["prefix_hit_tokens"] += T
+                        pstats["prefix_shared_pages"] += len(shared)
+                        if progress:
+                            print(f"[admit] rid={rid} slot={s} prompt={L} "
+                                  f"prefix hit: {T} tokens / "
+                                  f"{len(shared)} shared pages"
+                                  + (" + CoW" if cow_src is not None
+                                     else ""))
+                        continue
+                    if index is not None:
+                        pstats["prefix_misses"] += 1
                     bind_prefilling(s, rid, req)
                     if progress:
                         print(f"[admit] rid={rid} slot={s} prompt={L} "
@@ -932,6 +1091,8 @@ class ContinuousBatchingEngine:
                             first_tok[rid2] = t_c
                             slots[s2].generated = 1
                         tok = tok.at[s2, 0].set(t_c)
+                        if index is not None:
+                            register_prefix(s2, rid2)
                         if progress:
                             print(f"[prefill] rid={rid2} slot={s2} "
                                   f"complete at pos {host_pos[s2]}")
@@ -1036,7 +1197,8 @@ class ContinuousBatchingEngine:
                 trace_hook(self._snapshot(
                     n_steps, allocator, slots, host_bt, host_pos, caches,
                     queue, resume_q, swap, prefilling=prefilling,
-                    replaying=replaying))
+                    replaying=replaying,
+                    prefix=pstats if index is not None else None))
             pos_dev = caches[0].seq_pos[0]      # [S]; host_pos for active
             tok, caches = self._step(params, tok, caches, pos_dev)
             n_steps += 1
@@ -1096,6 +1258,15 @@ class ContinuousBatchingEngine:
             "swap_bytes_out": swap.bytes_out,
             "swap_bytes_in": swap.bytes_in,
             "swap_peak_bytes": swap.peak_bytes,
+            "prefix_cache": self.prefix_cache,
+            "prefix_hits": pstats["prefix_hits"],
+            "prefix_misses": pstats["prefix_misses"],
+            "prefix_hit_rate": pstats["prefix_hits"] / max(
+                pstats["prefix_hits"] + pstats["prefix_misses"], 1),
+            "prefix_hit_tokens": pstats["prefix_hit_tokens"],
+            "prefix_shared_pages": pstats["prefix_shared_pages"],
+            "cow_copies": pstats["cow_copies"],
+            "swap_refusals": pstats["swap_refusals"],
             "cache_bytes_per_value":
                 cache_mod.bytes_per_value(self.cc),
             "cache_total_bytes":
@@ -1145,6 +1316,17 @@ def main(argv=None):
                          "segment admit bit-identically to sequential; "
                          "longer prompts attend earlier segments through "
                          "their packed pages")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged engine: reuse packed pages across requests "
+                         "with a shared prompt prefix (radix index over "
+                         "whole-page, whole-segment prefixes; refcounted "
+                         "pages; copy-on-write at the tail boundary). "
+                         "Requires --prefill chunked; greedy tokens are "
+                         "bit-identical with the flag off")
+    ap.add_argument("--prefix-min-pages", type=int, default=1,
+                    help="prefix cache: minimum whole shared pages an "
+                         "admission must match to take the hit path "
+                         "(shorter matches prefill from scratch)")
     ap.add_argument("--preempt", choices=("off", "requeue", "swap", "auto"),
                     default="off",
                     help="paged engine: on decode-time pool exhaustion, "
@@ -1199,6 +1381,10 @@ def main(argv=None):
           f"prompt={args.prompt_len} gen={args.gen}")
 
     if args.engine == "paged":
+        if args.prefix_cache and args.prefill != "chunked":
+            ap.error("--prefix-cache relies on the chunked path's "
+                     "scheduling-invariant packed bytes; add "
+                     "--prefill chunked")
         need = args.prompt_len + args.gen - 1
         max_seq = -(-need // args.page_size) * args.page_size
         pages_per_seq = max_seq // args.page_size
@@ -1220,7 +1406,9 @@ def main(argv=None):
             max_seq_len=max_seq, policy=policy,
             prefill=args.prefill, chunk_size=args.chunk_size,
             chunk_align=args.chunk_align,
-            chunk_seg=args.chunk_seg or None)
+            chunk_seg=args.chunk_seg or None,
+            prefix_cache=args.prefix_cache,
+            prefix_min_pages=args.prefix_min_pages)
         reqs = [Request(np.asarray(batch["tokens"][b]), args.gen)
                 for b in range(args.batch)]
         if not args.no_warmup:
@@ -1231,6 +1419,13 @@ def main(argv=None):
               f"{stats['peak_pages_used']}/{stats['pool_pages']} pages "
               f"({stats['page_size']} slots) peak, "
               f"{stats['cache_total_bytes']/1e6:.2f} MB modeled")
+        if args.prefix_cache:
+            print(f"prefix-cache: {stats['prefix_hits']} hits / "
+                  f"{stats['prefix_misses']} misses "
+                  f"({stats['prefix_hit_rate']:.0%}), "
+                  f"{stats['prefix_hit_tokens']} prompt tokens from "
+                  f"cache, {stats['prefix_shared_pages']} pages shared, "
+                  f"{stats['cow_copies']} CoW copies")
         if policy is not None:
             print(f"preempt={args.preempt} victim={args.victim}: "
                   f"{stats['preemptions']} preemptions, "

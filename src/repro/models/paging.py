@@ -89,7 +89,7 @@ class ChunkMeta(NamedTuple):
 
 
 class PageAllocator:
-    """Host-side free-list allocator for the shared page pool.
+    """Host-side refcounted free-list allocator for the shared page pool.
 
     Page ids are shared across layers: allocating page `p` for a sequence
     reserves physical page `p` in every layer's pool (the block table is
@@ -97,19 +97,26 @@ class PageAllocator:
     traced steps; `alloc` raises `PoolExhausted` *before* any tracing when
     the request cannot be satisfied.
 
+    Pages carry **refcounts** so immutable full pages can back several
+    sequences at once (shared-prefix reuse): `alloc` hands out pages at
+    refcount 1, `share` adds a reference to an already-allocated page, and
+    `release` drops one — a page returns to the free list only when its
+    count reaches zero (`release` reports exactly which pages did, so the
+    caller can invalidate any prefix-index entries naming them).
+    `free` is strict release: it asserts every page was exclusively owned,
+    which preserves the old guard semantics (double frees, frees of
+    foreign pages, and frees of shared pages all trip it).
+
     `alloc` is atomic: a failing call takes nothing off the free list, so
-    an exhausted multi-page request never leaks pages. Every handed-out
-    page is tracked in a used set; `free` asserts each page is currently
-    allocated (the page-refcount guard — double frees, frees of foreign
-    pages, and frees of never-allocated pages all trip it), and
-    `assert_consistent` re-checks free/used conservation after every
-    mutation. `peak_used` is the pool's high watermark.
+    an exhausted multi-page request never leaks pages.
+    `assert_consistent` re-checks free/refcount conservation after every
+    mutation. `peak_used` is the pool's high watermark (distinct pages).
     """
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages))
-        self._used: set = set()
+        self._ref: Dict[int, int] = {}          # page -> reference count
         self.peak_used = 0
 
     @property
@@ -118,43 +125,275 @@ class PageAllocator:
 
     @property
     def used_count(self) -> int:
-        return len(self._used)
+        """Distinct allocated pages (each counted once however shared)."""
+        return len(self._ref)
+
+    @property
+    def shared_count(self) -> int:
+        """Allocated pages with more than one reference."""
+        return sum(1 for c in self._ref.values() if c > 1)
+
+    @property
+    def total_refs(self) -> int:
+        """Sum of all refcounts (== block-table references held)."""
+        return sum(self._ref.values())
 
     @property
     def free_pages(self) -> Tuple[int, ...]:
         """Snapshot of the free list (copy; safe to hold across mutations)."""
         return tuple(self._free)
 
+    def refcount(self, page: int) -> int:
+        """Current reference count (0 = free / never allocated)."""
+        return self._ref.get(page, 0)
+
+    @property
+    def refcounts(self) -> Dict[int, int]:
+        """Snapshot of page -> refcount (copy; for invariant checks)."""
+        return dict(self._ref)
+
     def alloc(self, n: int = 1) -> List[int]:
         if n > len(self._free):
             raise PoolExhausted(
                 f"page pool exhausted: need {n} page(s), {len(self._free)} "
-                f"of {self.n_pages} free — grow --n-pages, shrink the "
-                f"admitted batch, enable --preempt, or wait for evictions")
+                f"of {self.n_pages} free ({self.used_count} resident, of "
+                f"which {self.shared_count} shared across "
+                f"{self.total_refs} references) — grow --n-pages, shrink "
+                f"the admitted batch, enable --preempt, or wait for "
+                f"evictions")
         pages, self._free = self._free[:n], self._free[n:]
-        self._used.update(pages)
-        self.peak_used = max(self.peak_used, len(self._used))
+        for p in pages:
+            self._ref[p] = 1
+        self.peak_used = max(self.peak_used, len(self._ref))
         self.assert_consistent()
         return pages
 
-    def free(self, pages: Sequence[int]) -> None:
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one reference to each (already-allocated) page — the
+        shared-prefix adoption path: the new sequence's block table now
+        also names these pages."""
         for p in pages:
-            assert 0 <= p < self.n_pages, f"page {p} outside the pool"
-            assert p in self._used, \
-                f"page {p} freed while not allocated (double free / foreign)"
-            self._used.discard(p)
-            self._free.append(p)
+            assert self._ref.get(p, 0) > 0, \
+                f"page {p} shared while not allocated"
+            self._ref[p] += 1
         self.assert_consistent()
 
+    def release(self, pages: Sequence[int]) -> List[int]:
+        """Drop one reference per page; pages reaching zero return to the
+        free list. Returns the pages actually freed (refcount hit zero) so
+        the caller can invalidate prefix-index entries naming them."""
+        freed: List[int] = []
+        for p in pages:
+            assert 0 <= p < self.n_pages, f"page {p} outside the pool"
+            assert p in self._ref, \
+                f"page {p} released while not allocated (double free / " \
+                f"foreign)"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+                freed.append(p)
+        self.assert_consistent()
+        return freed
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Strict release: every page must have been exclusively owned
+        (refcount exactly 1). Shared pages must go through `release`."""
+        pages = list(pages)
+        for p in pages:
+            assert self._ref.get(p, 0) <= 1, \
+                f"page {p} freed while shared (refcount " \
+                f"{self._ref.get(p, 0)}) — use release()"
+        freed = self.release(pages)
+        assert len(freed) == len(pages)
+
     def assert_consistent(self) -> None:
-        """Free-list conservation: every page is free xor used, exactly
-        once. O(n_pages); cheap next to a traced decode step."""
+        """Refcount conservation: every page is free xor allocated with a
+        positive refcount, exactly once. O(n_pages); cheap next to a
+        traced decode step."""
         assert len(self._free) == len(set(self._free)), \
             "duplicate pages on the free list"
-        assert self._used.isdisjoint(self._free), \
+        assert not set(self._ref).intersection(self._free), \
             "page simultaneously free and allocated"
-        assert len(self._free) + len(self._used) == self.n_pages, \
+        assert all(c > 0 for c in self._ref.values()), \
+            "allocated page with non-positive refcount"
+        assert len(self._free) + len(self._ref) == self.n_pages, \
             "pages leaked: free + used != pool size"
+
+
+# ----------------------------------------------------------------------
+# shared-prefix index (host-side, non-owning)
+# ----------------------------------------------------------------------
+
+_HASH_MOD = (1 << 61) - 1       # Mersenne prime: cheap mod, no collisions
+_HASH_BASE = 1_000_003          # > any token id we hash
+
+
+def _segment_hash(tokens) -> int:
+    """Rolling polynomial hash of one token segment (child-bucket key in
+    the radix index; exact token comparison guards collisions)."""
+    h = 0
+    for t in tokens:
+        h = (h * _HASH_BASE + int(t) + 1) % _HASH_MOD
+    return h
+
+
+class _PrefixNode:
+    """One radix-tree node: a `quantum`-token prompt segment and the full
+    pages that hold its packed K/V. Children bucket by segment hash."""
+    __slots__ = ("tokens", "pages", "scales", "children", "parent", "key")
+
+    def __init__(self, tokens, pages, scales, parent, key):
+        self.tokens = tokens        # np.ndarray [quantum] token ids
+        self.pages = pages          # tuple[int] physical pages, block order
+        self.scales = scales        # per cache group: (k_scale, v_scale)
+        self.children: Dict[int, List["_PrefixNode"]] = {}
+        self.parent = parent        # None once dropped from the tree
+        self.key = key              # _segment_hash(tokens)
+
+
+class PrefixIndex:
+    """Radix tree over prompt prefixes -> full-page runs (shared-prefix
+    reuse, host-side).
+
+    Nodes are `quantum`-token segments — `quantum = lcm(page_size,
+    chunk_seg)`, so every node covers whole pages *and* whole prefill
+    segments: page-whole because only fully-written, never-again-written
+    pages are shareable; segment-whole because the chunked prefill packer
+    resumes a tail only at a segment boundary. Children are bucketed by a
+    rolling hash of the segment with exact token comparison on lookup, so
+    hash collisions cost a compare, never a false match.
+
+    The index does **not** own page references — entries are valid only
+    while some sequence still holds the pages (PR 5's scheduling
+    invariance makes the bytes a pure function of the prompt prefix, so
+    any holder's pages are interchangeable). The engine must call
+    `invalidate(freed)` with every page whose refcount reached zero
+    (`PageAllocator.release`'s return value): the node naming it — and
+    its whole subtree, whose prefixes include the dead pages — drop out.
+
+    Each node also carries the donor's frozen per-layer scales: the
+    §5.1 scale is frozen from the prompt's *first segment* (contained in
+    every node's prefix), so every donor on a match path froze the same
+    scale and a borrower adopting it decodes the shared pages
+    bit-identically.
+    """
+
+    def __init__(self, quantum: int, page_size: int):
+        assert quantum > 0 and quantum % page_size == 0, \
+            f"quantum {quantum} must cover whole pages of {page_size}"
+        self.quantum = quantum
+        self.page_size = page_size
+        self._root = _PrefixNode(None, (), None, None, None)
+        self._by_page: Dict[int, List[_PrefixNode]] = {}
+
+    # ----------------------------------------------------------- lookup
+    @staticmethod
+    def _find(node: _PrefixNode, seg: np.ndarray) -> Optional[_PrefixNode]:
+        for child in node.children.get(_segment_hash(seg), ()):
+            if np.array_equal(child.tokens, seg):
+                return child
+        return None
+
+    def match(self, tokens) -> Tuple[int, List[int], Optional[list]]:
+        """Longest indexed prefix of `tokens`, in whole quanta.
+
+        Returns (n_matched_tokens, pages, scales): the pages backing
+        prompt positions [0, n) in block order and the deepest matched
+        node's frozen scales (None on a miss). n is always a multiple of
+        `quantum`; 0 means no match."""
+        tokens = np.asarray(tokens)
+        q = self.quantum
+        node, pages, scales, n = self._root, [], None, 0
+        for d in range(len(tokens) // q):
+            child = self._find(node, tokens[d * q:(d + 1) * q])
+            if child is None:
+                break
+            node = child
+            pages.extend(child.pages)
+            scales = child.scales
+            n += q
+        return n, pages, scales
+
+    # ----------------------------------------------------------- insert
+    def insert(self, tokens, pages: Sequence[int], scales) -> int:
+        """Index the whole-quantum prefix of a freshly prefilled prompt.
+
+        `pages`: the sequence's pages in block order (at least the blocks
+        covering the indexed prefix); `scales`: its frozen per-layer
+        scales, per cache group. Segments already present keep their
+        existing pages (first donor wins — both copies are bit-identical
+        by scheduling invariance, and the existing entry may already be
+        shared). Returns the number of tokens indexed."""
+        tokens = np.asarray(tokens)
+        q, ps = self.quantum, self.page_size
+        ppn = q // ps                       # pages per node
+        depth = len(tokens) // q
+        assert len(pages) >= depth * ppn, "pages do not cover the prefix"
+        node = self._root
+        for d in range(depth):
+            seg = tokens[d * q:(d + 1) * q]
+            child = self._find(node, seg)
+            if child is None:
+                child = _PrefixNode(
+                    np.array(seg), tuple(int(p) for p in
+                                         pages[d * ppn:(d + 1) * ppn]),
+                    scales, node, _segment_hash(seg))
+                node.children.setdefault(child.key, []).append(child)
+                for p in child.pages:
+                    self._by_page.setdefault(p, []).append(child)
+            node = child
+        return depth * q
+
+    # ------------------------------------------------------- invalidate
+    def invalidate(self, pages: Sequence[int]) -> int:
+        """Drop every entry naming any of `pages` (they were released to
+        zero and may be reallocated with different bytes), including
+        subtrees — a deeper node's prefix contains its ancestors' pages.
+        Returns the number of nodes dropped."""
+        dropped = 0
+        for p in pages:
+            for node in list(self._by_page.get(p, ())):
+                dropped += self._drop(node)
+        return dropped
+
+    def _drop(self, node: _PrefixNode) -> int:
+        if node.parent is None:             # root, or already dropped
+            return 0
+        bucket = node.parent.children.get(node.key)
+        if bucket is not None and node in bucket:
+            bucket.remove(node)
+            if not bucket:
+                del node.parent.children[node.key]
+        node.parent = None
+        for p in node.pages:
+            b = self._by_page.get(p)
+            if b is not None and node in b:
+                b.remove(node)
+                if not b:
+                    del self._by_page[p]
+        dropped = 1
+        for bucket in list(node.children.values()):
+            for child in list(bucket):
+                dropped += self._drop(child)
+        node.children = {}
+        return dropped
+
+    # ------------------------------------------------------------ stats
+    @property
+    def n_nodes(self) -> int:
+        count, stack = 0, [self._root]
+        while stack:
+            n = stack.pop()
+            for bucket in n.children.values():
+                count += len(bucket)
+                stack.extend(bucket)
+        return count
+
+    @property
+    def indexed_pages(self) -> Tuple[int, ...]:
+        """Distinct pages currently named by some entry (sorted)."""
+        return tuple(sorted(self._by_page))
 
 
 @functools.partial(jax.tree_util.register_dataclass,
@@ -449,6 +688,40 @@ def adopt_prefill(store: PagedCacheStore, cs: CacheStore,
         v_scale=store.v_scale.at[:, slot].set(cs.v.scale),
         block_table=store.block_table.at[:, slot].set(bt_row),
         seq_pos=store.seq_pos.at[:, slot].set(cs.pos))
+
+
+def copy_page(store: PagedCacheStore, src: jnp.ndarray,
+              dst: jnp.ndarray) -> PagedCacheStore:
+    """Copy one physical page's packed planes to another (layer-stacked
+    store) — the copy-on-write step of shared-prefix admission: when a
+    new sequence's unshared tail begins mid-page, the partially-covered
+    boundary page is duplicated so the tail prefill rewrites a private
+    copy and never a page another sequence reads (refcount > 1 pages are
+    write-never). A raw byte copy of all four §5.1 planes: rows below
+    the tail boundary stay bit-identical to the shared original; rows at
+    and above it are stale bytes the tail chunk overwrites."""
+    upd = {name: getattr(store, name).at[:, dst].set(
+        getattr(store, name)[:, src]) for name in _SWAP_PLANES}
+    return dataclasses.replace(store, **upd)
+
+
+def adopt_prefix_scales(store: PagedCacheStore, slot: jnp.ndarray,
+                        k_scale: jnp.ndarray, v_scale: jnp.ndarray
+                        ) -> PagedCacheStore:
+    """Install a donor's frozen per-layer scales on `slot` (layer-stacked
+    store; k_scale/v_scale [L] f32). Shared-prefix admission must do this
+    *before* the tail prefill runs: the slot's scale would otherwise
+    still be 0 (uncalibrated) — the tail carries no first-segment tokens
+    to freeze it from — and §5.1 decode of the shared pages needs exactly
+    the scale their bytes were encoded with. The donor froze its scale
+    from the prompt's first segment, which is inside the shared prefix,
+    so the adopted scale equals the scale the borrower would have frozen
+    itself: adoption changes nothing numerically, it only short-circuits
+    recomputation."""
+    return dataclasses.replace(
+        store,
+        k_scale=store.k_scale.at[:, slot].set(k_scale),
+        v_scale=store.v_scale.at[:, slot].set(v_scale))
 
 
 def evict_slot(store: PagedCacheStore, slot: jnp.ndarray) -> PagedCacheStore:

@@ -371,7 +371,7 @@ class TestAllocator:
         al.alloc(1)
         assert al.peak_used == 3                # high watermark persists
         assert al.free_count == 3 and al.used_count == 1
-        assert set(al.free_pages).isdisjoint(al._used)
+        assert set(al.free_pages).isdisjoint(al.refcounts)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,343 @@
+"""Shared-prefix page reuse: the radix prefix index and the refcounted
+allocator, unit-tested in isolation, plus the engine-level configuration
+contract (prefix cache requires the chunked prefill path).
+
+The index invariants under test mirror how the engine uses it:
+longest-match correctness, whole-quantum granularity (only fully-written
+pages are shareable, so partial trailing segments never index), first
+donor wins on concurrent registration, invalidation on release-to-zero
+(a dead page kills its node and the node's whole subtree — deeper
+prefixes contain the dead pages), and hash-collision safety (the rolling
+segment hash only buckets; exact token comparison decides). A
+hypothesis-optional property test checks the radix structure against a
+naive dictionary model over random insert/match/invalidate
+interleavings, same convention as the allocator interleaving test in
+test_scheduler.
+
+Engine-level shared-prefix behavior (refcount conservation under
+preemption, on/off token equality, copy-on-write, swap refusal) lives in
+test_scheduler's randomized-trace harness; the end-to-end throughput
+claim in benchmarks/run.py shared_prefix.
+"""
+import numpy as np
+import pytest
+
+from repro.models import paging
+from repro.models.paging import PageAllocator, PoolExhausted, PrefixIndex
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare CI images
+    HAVE_HYPOTHESIS = False
+
+
+# ----------------------------------------------------------------------
+# refcounted allocator: share / release semantics
+# ----------------------------------------------------------------------
+
+class TestRefcounts:
+    def test_share_release_lifecycle(self):
+        al = PageAllocator(6)
+        pages = al.alloc(3)
+        al.share(pages[:2])                     # second holder
+        assert [al.refcount(p) for p in pages] == [2, 2, 1]
+        assert al.shared_count == 2 and al.total_refs == 5
+        # first holder leaves: shared pages survive, exclusive one frees
+        freed = al.release(pages)
+        assert freed == [pages[2]]
+        assert al.free_count == 4
+        # second holder leaves: now they free
+        assert sorted(al.release(pages[:2])) == sorted(pages[:2])
+        assert al.free_count == 6 and al.used_count == 0
+        al.assert_consistent()
+
+    def test_share_unallocated_asserts(self):
+        al = PageAllocator(4)
+        with pytest.raises(AssertionError, match="not allocated"):
+            al.share([2])
+
+    def test_free_of_shared_page_asserts(self):
+        """`free` keeps the strict exclusive-ownership contract: shared
+        pages must go through `release`."""
+        al = PageAllocator(4)
+        pages = al.alloc(2)
+        al.share(pages)
+        with pytest.raises(AssertionError, match="use release"):
+            al.free(pages)
+
+    def test_release_to_zero_reports_freed_pages(self):
+        al = PageAllocator(4)
+        (a,) = al.alloc(1)
+        (b,) = al.alloc(1)
+        al.share([a])
+        assert al.release([a, b]) == [b]        # a still held
+        assert al.release([a]) == [a]
+
+    def test_exhaustion_message_reports_sharing(self):
+        """The PoolExhausted message distinguishes resident from shared
+        pages so oversubscription failures under sharing are
+        diagnosable: requested vs free vs shared-resident counts."""
+        al = PageAllocator(4)
+        pages = al.alloc(3)
+        al.share(pages[:2])
+        with pytest.raises(PoolExhausted,
+                           match=r"need 2 page\(s\), 1 of 4 free "
+                                 r"\(3 resident, of which 2 shared "
+                                 r"across 5 references\)"):
+            al.alloc(2)
+        # atomic: the failing alloc took nothing
+        assert al.free_count == 1
+
+    def test_shared_alloc_conservation_sweep(self):
+        """Seeded interleavings of alloc/share/release conserve the pool:
+        free + distinct-held == n_pages and refcount == holder count."""
+        rng = np.random.default_rng(3)
+        al = PageAllocator(8)
+        holders: list = []                      # list of page lists
+        for _ in range(200):
+            op = rng.integers(0, 3)
+            if op == 0 and al.free_count:
+                n = int(rng.integers(1, al.free_count + 1))
+                holders.append(al.alloc(n))
+            elif op == 1 and holders:
+                src = holders[rng.integers(len(holders))]
+                al.share(src)
+                holders.append(list(src))
+            elif op == 2 and holders:
+                al.release(holders.pop(rng.integers(len(holders))))
+            counts: dict = {}
+            for hl in holders:
+                for p in hl:
+                    counts[p] = counts.get(p, 0) + 1
+            assert counts == al.refcounts
+            assert al.free_count + len(counts) == 8
+            al.assert_consistent()
+
+
+# ----------------------------------------------------------------------
+# radix prefix index
+# ----------------------------------------------------------------------
+
+def _toks(*vals):
+    return np.asarray(vals, np.int64)
+
+
+class TestPrefixIndex:
+    def test_longest_match(self):
+        ix = PrefixIndex(quantum=4, page_size=4)
+        ix.insert(_toks(*range(12)), [10, 11, 12], scales="A")
+        # full, partial, and divergent queries
+        n, pages, sc = ix.match(_toks(*range(12)))
+        assert (n, pages, sc) == (12, [10, 11, 12], "A")
+        n, pages, _ = ix.match(_toks(*range(8), 99, 98, 97, 96))
+        assert (n, pages) == (8, [10, 11])
+        assert ix.match(_toks(99, 98, 97, 96))[0] == 0
+        # queries shorter than one quantum can never match
+        assert ix.match(_toks(0, 1, 2))[0] == 0
+
+    def test_whole_quantum_granularity(self):
+        """Only whole quanta index: a 10-token prompt at quantum 4
+        registers 8 tokens / 2 pages — the ragged trailing segment (and
+        its partially-filled page) is never shareable."""
+        ix = PrefixIndex(quantum=4, page_size=4)
+        assert ix.insert(_toks(*range(10)), [5, 6, 7], scales=None) == 8
+        assert ix.n_nodes == 2
+        n, pages, _ = ix.match(_toks(*range(10)))
+        assert (n, pages) == (8, [5, 6])
+        assert 7 not in ix.indexed_pages
+
+    def test_multi_page_nodes(self):
+        """quantum > page_size: each node carries quantum/page_size
+        pages and matches stay node-atomic."""
+        ix = PrefixIndex(quantum=8, page_size=4)
+        ix.insert(_toks(*range(16)), [1, 2, 3, 4], scales=None)
+        n, pages, _ = ix.match(_toks(*range(12)))   # 12 < 2 quanta
+        assert (n, pages) == (8, [1, 2])
+
+    def test_first_donor_wins(self):
+        """Concurrent cold admissions of the same prompt register
+        different physical pages; the second insert adopts the existing
+        entry instead of replacing it (both byte-identical by scheduling
+        invariance, and the first may already be shared)."""
+        ix = PrefixIndex(quantum=4, page_size=4)
+        ix.insert(_toks(1, 2, 3, 4), [7], scales="first")
+        ix.insert(_toks(1, 2, 3, 4), [9], scales="second")
+        assert ix.n_nodes == 1
+        n, pages, sc = ix.match(_toks(1, 2, 3, 4))
+        assert (n, pages, sc) == (4, [7], "first")
+
+    def test_branching(self):
+        ix = PrefixIndex(quantum=4, page_size=4)
+        ix.insert(_toks(0, 1, 2, 3, 10, 11, 12, 13), [1, 2], scales=None)
+        ix.insert(_toks(0, 1, 2, 3, 20, 21, 22, 23), [1, 3], scales=None)
+        assert ix.n_nodes == 3                  # shared root segment
+        assert ix.match(_toks(0, 1, 2, 3, 20, 21, 22, 23))[1] == [1, 3]
+
+    def test_invalidate_releases_subtree(self):
+        """Release-to-zero of a page kills its node AND every deeper
+        node: a surviving deeper entry would hand out the dead page as
+        part of its prefix run."""
+        ix = PrefixIndex(quantum=4, page_size=4)
+        ix.insert(_toks(*range(12)), [1, 2, 3], scales=None)
+        ix.insert(_toks(0, 1, 2, 3, 50, 51, 52, 53), [1, 9], scales=None)
+        assert ix.n_nodes == 4
+        assert ix.invalidate([2]) == 2          # node for page 2 + child
+        n, pages, _ = ix.match(_toks(*range(12)))
+        assert (n, pages) == (4, [1])
+        # the sibling branch under page 1 survives
+        assert ix.match(_toks(0, 1, 2, 3, 50, 51, 52, 53))[1] == [1, 9]
+        # killing the root segment empties the tree
+        ix.invalidate([1])
+        assert ix.n_nodes == 0 and ix.indexed_pages == ()
+
+    def test_invalidate_unknown_page_is_noop(self):
+        ix = PrefixIndex(quantum=4, page_size=4)
+        ix.insert(_toks(1, 2, 3, 4), [0], scales=None)
+        assert ix.invalidate([3]) == 0
+        assert ix.n_nodes == 1
+
+    def test_hash_collisions_never_false_match(self, monkeypatch):
+        """Bucket the hash to a constant: every segment collides, and
+        lookups must still resolve by exact token comparison."""
+        monkeypatch.setattr(paging, "_segment_hash", lambda toks: 17)
+        ix = PrefixIndex(quantum=4, page_size=4)
+        ix.insert(_toks(1, 2, 3, 4), [0], scales="A")
+        ix.insert(_toks(4, 3, 2, 1), [1], scales="B")
+        ix.insert(_toks(1, 2, 3, 4, 9, 9, 9, 9), [0, 2], scales="C")
+        assert ix.match(_toks(4, 3, 2, 1))[1] == [1]
+        assert ix.match(_toks(1, 2, 3, 4, 9, 9, 9, 9))[1] == [0, 2]
+        assert ix.match(_toks(5, 5, 5, 5))[0] == 0
+
+
+# ----------------------------------------------------------------------
+# property test: radix index vs a naive dictionary model
+# ----------------------------------------------------------------------
+
+class _NaiveIndex:
+    """Reference model: one dict entry per (prefix-tuple) node."""
+
+    def __init__(self, quantum, page_size):
+        self.q, self.ppn = quantum, quantum // page_size
+        self.nodes = {}                 # prefix tuple -> own page run
+
+    def insert(self, tokens, pages):
+        depth = len(tokens) // self.q
+        for d in range(depth):
+            key = tuple(tokens[:(d + 1) * self.q])
+            self.nodes.setdefault(
+                key, tuple(pages[d * self.ppn:(d + 1) * self.ppn]))
+
+    def match(self, tokens):
+        pages, n = [], 0
+        for d in range(len(tokens) // self.q):
+            key = tuple(tokens[:(d + 1) * self.q])
+            if key not in self.nodes:
+                break
+            pages.extend(self.nodes[key])
+            n += self.q
+        return n, pages
+
+    def invalidate(self, dead):
+        dead = set(dead)
+        direct = {k for k, v in self.nodes.items() if dead & set(v)}
+        self.nodes = {k: v for k, v in self.nodes.items()
+                      if not any(k[:len(r)] == r for r in direct)}
+
+
+def _run_index_script(quantum, page_size, ops):
+    """Interpret (op, seed) pairs against PrefixIndex and the naive
+    model, asserting identical match results after every operation.
+    Token sequences draw from a tiny alphabet with short lengths so
+    prefixes collide often; pages are distinct per insert."""
+    ix = PrefixIndex(quantum=quantum, page_size=page_size)
+    naive = _NaiveIndex(quantum, page_size)
+    ppn = quantum // page_size
+    next_page = 0
+    for op_i, seed in ops:
+        rng = np.random.default_rng(seed)
+        toks = rng.integers(0, 3, (int(rng.integers(1, 4 * quantum)),))
+        op = ("insert", "match", "invalidate")[op_i % 3]
+        if op == "insert":
+            depth = len(toks) // quantum
+            pages = list(range(next_page, next_page + depth * ppn))
+            next_page += len(pages)
+            ix.insert(toks, pages, scales=None)
+            naive.insert(toks, pages)
+        elif op == "match":
+            pass                        # compared below every op anyway
+        elif op == "invalidate":
+            dead = [int(rng.integers(0, max(next_page, 1)))]
+            ix.invalidate(dead)
+            naive.invalidate(dead)
+        got_n, got_pages, _ = ix.match(toks)
+        want_n, want_pages = naive.match(toks)
+        assert (got_n, got_pages) == (want_n, want_pages)
+        assert len(ix.indexed_pages) == len(
+            {p for v in naive.nodes.values() for p in v})
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from([(4, 4), (8, 4)]),
+           st.lists(st.tuples(st.integers(0, 2), st.integers(0, 10 ** 6)),
+                    max_size=40))
+    @settings(max_examples=150, deadline=None)
+    def test_index_matches_naive_model_property(geom, ops):
+        _run_index_script(*geom, ops)
+
+
+def test_index_matches_naive_model_sweep():
+    """Deterministic fallback mirroring the hypothesis property."""
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        quantum, page_size = (4, 4) if seed % 2 else (8, 4)
+        ops = [(int(rng.integers(0, 3)), int(rng.integers(0, 10 ** 6)))
+               for _ in range(40)]
+        _run_index_script(quantum, page_size, ops)
+
+
+# ----------------------------------------------------------------------
+# engine configuration contract
+# ----------------------------------------------------------------------
+
+def test_prefix_cache_requires_chunked_prefill():
+    """Sequential admission freezes scales from the whole prompt's
+    dynamic range, so equal prefixes of different prompts would NOT
+    produce equal bytes — the engine must refuse the combination."""
+    import jax.numpy as jnp
+    from repro.configs.base import get_reduced_config
+    from repro.models.cache import CacheConfig
+    from repro.models.model import Model
+    from repro.core.sparq import SparqConfig
+    from repro.launch.serve import ContinuousBatchingEngine
+    cfg = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False)
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True),
+                                 impl="reference")
+    with pytest.raises(ValueError, match="prefill chunked"):
+        ContinuousBatchingEngine(
+            Model(cfg), cc, page_size=4, n_pages=8, max_active=2,
+            max_seq_len=16, prefill="sequential", prefix_cache=True)
+
+
+def test_quantum_covers_pages_and_segments():
+    """The engine's match granularity is lcm(page_size, chunk_seg): a
+    PrefixIndex built on anything that does not cover whole pages is
+    rejected at construction."""
+    with pytest.raises(AssertionError, match="whole pages"):
+        PrefixIndex(quantum=6, page_size=4)
+    import jax.numpy as jnp
+    from repro.configs.base import get_reduced_config
+    from repro.models.cache import CacheConfig
+    from repro.models.model import Model
+    from repro.core.sparq import SparqConfig
+    from repro.launch.serve import ContinuousBatchingEngine
+    cfg = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False)
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True),
+                                 impl="reference")
+    eng = ContinuousBatchingEngine(
+        Model(cfg), cc, page_size=4, n_pages=8, max_active=2,
+        max_seq_len=16, prefill="chunked", chunk_size=16, chunk_align=4,
+        chunk_seg=2, prefix_cache=True)
+    assert eng._quantum == 4                    # lcm(4, 2)

@@ -182,11 +182,30 @@ class InvariantChecker:
     def __call__(self, snap):
         slots = snap["slots"]
         owned = [p for info in slots.values() for p in info["pages"]]
-        both = list(snap["free_pages"]) + owned
-        # no page double-use, free-list conservation (free ⊎ owned = pool)
-        assert len(both) == len(set(both)), "page double-use"
-        assert sorted(both) == list(range(snap["n_pages"])), \
+        mult = {}
+        for p in owned:
+            mult[p] = mult.get(p, 0) + 1
+        free = set(snap["free_pages"])
+        # refcount conservation: every page's refcount equals the number
+        # of block-table references across slots (without a prefix cache
+        # all counts are 1, reducing to the old no-double-use invariant)
+        assert mult == snap["page_refcounts"], \
+            "page refcounts disagree with block-table references"
+        # "preemption never frees a page another sequence references":
+        # a page on the free list is referenced by no live slot, and
+        # free ∪ referenced covers the pool exactly
+        assert free.isdisjoint(mult), "freed page still referenced"
+        assert len(free) + len(mult) == snap["n_pages"], \
             "free-list conservation violated"
+        # shared pages are write-never: any slot whose next write lands
+        # mid-page must own that page exclusively
+        for s, info in slots.items():
+            if info["pos"] % self.ps:
+                blk = info["pos"] // self.ps
+                row = snap["host_bt"][s]
+                if blk < row.shape[0] and row[blk] >= 0:
+                    assert snap["page_refcounts"][row[blk]] == 1, \
+                        f"slot {s} would write shared page {row[blk]}"
         self.max_owned = max(self.max_owned, len(owned))
         for s, info in slots.items():
             # block table is exactly the owned pages, in block order,
@@ -394,6 +413,123 @@ def test_resume_has_priority_over_admission(tiny_lm):
             params, {"tokens": jnp.asarray(req.tokens)[None]}, req.gen,
             warmup=False)
         np.testing.assert_array_equal(results[rid], np.asarray(toks)[0])
+
+
+# ----------------------------------------------------------------------
+# shared-prefix traces: refcount invariants + on/off token equality
+# ----------------------------------------------------------------------
+
+def _make_shared_trace(seed: int, vocab: int):
+    """Shared-system-prompt trace: every request opens with the same
+    8-token preamble (2 pages at PS=4), four carry distinct ragged tails
+    and two are exact duplicates of the first (full-prompt matches — with
+    seg < PS their tail boundary lands mid-page, driving copy-on-write).
+    Arrivals are staggered so later requests admit while donors are still
+    resident."""
+    rng = np.random.default_rng(seed)
+    from repro.launch.serve import Request
+    preamble = rng.integers(0, vocab, (8,))
+    reqs = []
+    for i in range(4):
+        # request 0's length is a whole number of pages (8 + 4 = 12) so
+        # its FULL prompt gets indexed and the duplicates match it
+        # end-to-end (the partial-match path is covered by requests 1-3,
+        # whose registered prefix is capped at the whole-quantum floor)
+        tail = rng.integers(0, vocab,
+                            (4 if i == 0 else int(rng.integers(1, 5)),))
+        g = int(rng.integers(6, 11))
+        reqs.append(Request(np.concatenate([preamble, tail]), g,
+                            arrive_at=3 * i))
+    for i, a in enumerate((2, 7)):              # duplicates of request 0
+        reqs.append(Request(reqs[0].tokens.copy(),
+                            int(rng.integers(6, 11)), arrive_at=a))
+    return reqs
+
+
+def _run_shared_trace(tiny_lm, codec, n_pages, policy_mode, prefix,
+                      hook=None):
+    from repro.launch.serve import ContinuousBatchingEngine, SchedulerPolicy
+    model, params = tiny_lm
+    reqs = _make_shared_trace(seed=7, vocab=model.cfg.vocab_size)
+    eng = ContinuousBatchingEngine(
+        model, _cc(codec), page_size=PS, n_pages=n_pages, max_active=3,
+        max_seq_len=24,
+        policy=SchedulerPolicy(preempt=policy_mode, victim="last_joined"),
+        prefill="chunked", chunk_size=16, chunk_align=4, chunk_seg=2,
+        prefix_cache=prefix)
+    return eng.run(params, reqs, trace_hook=hook)
+
+
+_INT8 = SparqConfig(enabled=False, signed=True)
+
+
+@pytest.fixture(scope="module")
+def shared_trace_reference(tiny_lm):
+    """Prefix-cache-OFF tokens per codec, generous pool. By PR 5's
+    scheduling invariance these are THE tokens for (prompt, seg) — every
+    pool size and policy must reproduce them exactly, shared pages or
+    not."""
+    return {name: _run_shared_trace(tiny_lm, codec, 24, "requeue",
+                                    prefix=False)[0]
+            for name, codec in (("5opt", None), ("int8", _INT8))}
+
+
+@pytest.mark.parametrize("n_pages,policy_mode,codec_name", [
+    (24, "requeue", "5opt"),
+    (8, "requeue", "5opt"),
+    (8, "swap", "int8"),
+    (7, "swap", "5opt"),
+    (7, "requeue", "int8"),
+], ids=["pool24-requeue-5opt", "pool8-requeue-5opt", "pool8-swap-int8",
+        "pool7-swap-5opt", "pool7-requeue-int8"])
+def test_shared_prefix_trace_exact_and_conserving(
+        tiny_lm, shared_trace_reference, n_pages, policy_mode, codec_name):
+    """Shared-prefix serving under preemption: per-step refcount
+    conservation (block-table references == page refcounts, preemption
+    never frees a page another sequence references, shared pages are
+    write-never) and greedy tokens bit-identical to the prefix-cache-OFF
+    reference."""
+    codec = None if codec_name == "5opt" else _INT8
+    check = InvariantChecker(ps=PS)
+    results, stats = _run_shared_trace(tiny_lm, codec, n_pages,
+                                       policy_mode, prefix=True,
+                                       hook=check)
+    assert check.steps == stats["decode_steps"] > 0
+    assert stats["prefix_hits"] >= 1, "trace produced no prefix hits"
+    assert stats["prefix_shared_pages"] >= 1
+    if n_pages >= 24:
+        # generous pool: donors stay resident, so every later request
+        # hits, and the duplicates' full-prompt matches resume mid-page
+        assert stats["prefix_misses"] <= 1
+        assert stats["cow_copies"] >= 1
+        assert stats["preemptions"] == 0
+    else:
+        assert stats["preemptions"] > 0, \
+            "trace did not stress the pool — tighten it"
+    if policy_mode == "swap" and stats["preempt_swap"] > 0:
+        assert stats["swap_bytes_out"] == stats["swap_bytes_in"] > 0
+    ref = shared_trace_reference[codec_name]
+    for rid in ref:
+        np.testing.assert_array_equal(results[rid], ref[rid])
+
+
+def test_swap_refuses_shared_pages(tiny_lm):
+    """A victim holding shared pages may not park them in the SwapStore
+    (the other holders keep them live in the pool); under the swap policy
+    such victims requeue instead, counted by swap_refusals, and the other
+    sequences' shared pages survive the preemption (checked per-step by
+    the refcount invariants)."""
+    check = InvariantChecker(ps=PS)
+    results, stats = _run_shared_trace(tiny_lm, None, 7, "swap",
+                                       prefix=True, hook=check)
+    assert stats["preemptions"] > 0
+    assert stats["swap_refusals"] >= 1, \
+        "no victim held shared pages — the refusal path went untested"
+    # every refused swap took the requeue path instead
+    assert stats["preempt_requeue"] >= stats["swap_refusals"]
+    ref, _ = _run_shared_trace(tiny_lm, None, 24, "requeue", prefix=False)
+    for rid in ref:
+        np.testing.assert_array_equal(results[rid], ref[rid])
 
 
 # ----------------------------------------------------------------------
