@@ -12,7 +12,10 @@ set, under both preemption policies), prefill_saturation writes
 BENCH_prefill.json (sequential vs chunked admission throughput), and
 shared_prefix writes BENCH_prefix.json (prefix-cache off vs on under a
 75%-shared-prefix workload) so the serving-perf trajectory accumulates
-across PRs.
+across PRs. Every blob also carries a `compile_cache` section — the
+jaxpr auditor's programs-traced / jaxprs-per-program tallies
+(docs/analysis.md) — so a per-shape retrace regression is visible next
+to the throughput numbers it would poison.
 """
 from __future__ import annotations
 
@@ -20,6 +23,27 @@ import argparse
 import json
 import sys
 import time
+
+_ANALYSIS_COUNTERS = None
+
+
+def _analysis_counters() -> dict:
+    """Jaxpr-auditor compile-cache tallies (programs traced, jaxprs per
+    program), computed once per run via abstract tracing — no FLOPs.
+    Folded into every BENCH blob so a per-shape retrace regression shows
+    up next to the throughput numbers it would poison."""
+    global _ANALYSIS_COUNTERS
+    if _ANALYSIS_COUNTERS is None:
+        from repro.analysis import analysis_counters
+        _ANALYSIS_COUNTERS = analysis_counters()
+    return _ANALYSIS_COUNTERS
+
+
+def _dump(out_json: str, blob: dict) -> None:
+    blob = dict(blob, compile_cache=_analysis_counters())
+    with open(out_json, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_json}", file=sys.stderr)
 
 
 def decode_cache_rows(out_json: str = "BENCH_decode.json",
@@ -56,9 +80,7 @@ def decode_cache_rows(out_json: str = "BENCH_decode.json",
                   blob[tag]["cache_bytes_per_value"]),
                  (cfg_name, "cache_total_bytes",
                   round(blob[tag]["cache_total_bytes"], 0))]
-    with open(out_json, "w") as f:
-        json.dump(blob, f, indent=2, sort_keys=True)
-    print(f"# wrote {out_json}", file=sys.stderr)
+    _dump(out_json, blob)
     return rows
 
 
@@ -160,9 +182,7 @@ def paged_serving_rows(out_json: str = "BENCH_paged.json",
     assert summed > stats["pool_slots"], "workload must overflow the pool"
     rows += [("tinyllama_reduced_ragged", k, v)
              for k, v in blob["ragged"].items()]
-    with open(out_json, "w") as f:
-        json.dump(blob, f, indent=2, sort_keys=True)
-    print(f"# wrote {out_json}", file=sys.stderr)
+    _dump(out_json, blob)
     return rows
 
 
@@ -232,9 +252,7 @@ def oversubscribed_serving_rows(out_json: str = "BENCH_preempt.json",
                       blob[tag]["decode_tok_s"]),
                      (cfg_name, "preemptions", stats["preemptions"]),
                      (cfg_name, "swap_bytes_out", stats["swap_bytes_out"])]
-    with open(out_json, "w") as f:
-        json.dump(blob, f, indent=2, sort_keys=True)
-    print(f"# wrote {out_json}", file=sys.stderr)
+    _dump(out_json, blob)
     return rows
 
 
@@ -324,9 +342,7 @@ def prefill_saturation_rows(out_json: str = "BENCH_prefill.json",
                  (cfg_name, "prefill_compiles", b["prefill_compiles"])]
     rows.append(("tinyllama_reduced_prefill", "cold_admit_speedup",
                  blob["cold_admit_speedup"]))
-    with open(out_json, "w") as f:
-        json.dump(blob, f, indent=2, sort_keys=True)
-    print(f"# wrote {out_json}", file=sys.stderr)
+    _dump(out_json, blob)
     return rows
 
 
@@ -448,9 +464,7 @@ def shared_prefix_rows(out_json: str = "BENCH_prefix.json",
               blob["steady_admit_speedup"]),
              ("tinyllama_reduced_prefix", "peak_pages_ratio",
               blob["peak_pages_ratio"])]
-    with open(out_json, "w") as f:
-        json.dump(blob, f, indent=2, sort_keys=True)
-    print(f"# wrote {out_json}", file=sys.stderr)
+    _dump(out_json, blob)
     return rows
 
 

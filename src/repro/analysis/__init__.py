@@ -1,0 +1,67 @@
+"""Static analysis for the repro serving stack.
+
+Two engines over one Finding/baseline vocabulary (docs/analysis.md):
+
+- `jaxpr_audit` traces the registered hot programs (`registry`) into
+  closed jaxprs and enforces device-side invariants: no host callbacks
+  or transfers (JX101), packed planes never decoded outside a kernel
+  (JX102), Pallas tile divisibility (JX103), page-sized tiles in paged
+  paths (JX104), VMEM budget (JX105), one jaxpr per program under the
+  engine's real shape set (JX106).
+- `host_lint` walks the scheduler modules' ASTs and enforces the host
+  side of the contract: no per-step device math (HL201) or implicit
+  syncs (HL202), no allocator mutation from traced code (HL203),
+  `PoolExhausted` raised before tracing (HL204), every trace entry
+  point declared in `__analysis__` (HL205).
+
+`run_all()` is the programmatic entry; `python -m repro.analysis` the
+CLI; the CI `analysis` job runs it with `--fail-on-findings` and
+uploads the JSON report as a build artifact.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import (ALL_CHECKS, Finding, Suppression,
+                                     default_baseline_path, load_baseline,
+                                     report_json, split_suppressed,
+                                     write_json)
+from repro.analysis.host_lint import DEFAULT_TARGETS, lint_all
+from repro.analysis.jaxpr_audit import (DEFAULT_VMEM_BUDGET, ProgramSpec,
+                                        audit_all)
+
+__all__ = [
+    "ALL_CHECKS", "DEFAULT_TARGETS", "DEFAULT_VMEM_BUDGET", "Finding",
+    "ProgramSpec", "Suppression", "audit_all", "analysis_counters",
+    "default_baseline_path", "lint_all", "load_baseline", "report_json",
+    "run_all", "split_suppressed", "write_json",
+]
+
+
+def run_all(*, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+            baseline_path: Optional[str] = None,
+            targets: Sequence[str] = DEFAULT_TARGETS,
+            ) -> Tuple[List[Finding], List[Finding], dict]:
+    """Run both engines and apply the baseline.
+
+    Returns (unsuppressed, suppressed, counters); `counters` carries the
+    jaxpr auditor's compile-cache tallies (programs traced, jaxprs per
+    program). Pass `baseline_path=""` to skip suppression entirely."""
+    from repro.analysis.registry import default_programs
+    findings, counters = audit_all(default_programs(),
+                                   vmem_budget=vmem_budget)
+    findings += lint_all(targets)
+    if baseline_path is None:
+        baseline_path = default_baseline_path()
+    sups = load_baseline(baseline_path) if baseline_path else []
+    live, muted = split_suppressed(findings, sups)
+    return live, muted, counters
+
+
+def analysis_counters(*, vmem_budget: int = DEFAULT_VMEM_BUDGET) -> dict:
+    """Just the jaxpr auditor's compile-cache counters (no lint pass) —
+    benchmarks fold these into their BENCH output so a signature
+    explosion shows up next to the numbers it would poison."""
+    from repro.analysis.registry import default_programs
+    _, counters = audit_all(default_programs(), vmem_budget=vmem_budget)
+    return counters

@@ -1,0 +1,51 @@
+"""CLI: `python -m repro.analysis [--fail-on-findings] [--json out.json]`.
+
+Prints every finding (suppressed ones tagged with their baseline
+reason), writes the machine-readable report when asked, and — under
+`--fail-on-findings` — exits 1 if any finding survives the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import (DEFAULT_VMEM_BUDGET, default_baseline_path,
+                            run_all, write_json)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr invariant auditor + host-discipline linter")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 if any unsuppressed finding remains")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the findings report as JSON")
+    ap.add_argument("--baseline", metavar="PATH",
+                    default=default_baseline_path(),
+                    help="suppression file (default: the reviewed "
+                         "analysis/baseline.toml; pass '' to disable)")
+    ap.add_argument("--vmem-budget", type=int, default=DEFAULT_VMEM_BUDGET,
+                    help="per-kernel VMEM budget in bytes for JX105 "
+                         "(default: %(default)s)")
+    args = ap.parse_args(argv)
+
+    live, muted, counters = run_all(vmem_budget=args.vmem_budget,
+                                    baseline_path=args.baseline)
+    for f in live:
+        print(f.format())
+    for f in muted:
+        print(f"{f.format()}  [suppressed]")
+    if args.json:
+        write_json(args.json, live, muted, counters)
+    per_program = counters.get("jaxprs_per_program", {})
+    print(f"analysis: {counters.get('programs_traced', 0)} programs "
+          f"traced ({sum(per_program.values())} jaxprs), "
+          f"{len(live)} finding(s), {len(muted)} suppressed")
+    if args.fail_on_findings and live:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

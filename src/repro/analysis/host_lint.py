@@ -1,0 +1,564 @@
+"""AST host-discipline linter for the serving stack's host/device split.
+
+The paged engine's contract (docs/serving.md) is that scheduling is host
+work *between* traced steps: numpy state, explicit `jax.device_get` at
+the few points a decision needs device bytes, allocator mutation only
+from host code, and `PoolExhausted` raised before anything is traced.
+This linter enforces that contract statically over `launch/serve.py`,
+`launch/prefill.py`, and `models/paging.py`.
+
+Modules declare their own topology in a module-level `__analysis__`
+dict (parsed with `ast.literal_eval` — it must stay a pure literal):
+
+    __analysis__ = {
+        # functions that run under jit/scan (qualnames; entries with a
+        # module prefix, e.g. "paging.adopt_prefill", document jit
+        # targets defined in another module for HL205)
+        "traced": ("Engine._step_fn", ...),
+        # the per-step scheduler loop(s): HL201/HL202 scope
+        "host_loop": ("Engine.run", ...),
+        # call-chain suffixes whose results are device arrays
+        "device_returning": ("_sched.run", ...),
+        # "Qualname.param" names that arrive as device arrays
+        "device_params": ("SwapStore._to_host.groups", ...),
+        # host-side scheduling objects: never device values, so taint
+        # cannot attach to these names (their methods may still be
+        # declared device_returning)
+        "host_objects": ("sched", "index", "allocator", "swap"),
+    }
+
+Checks:
+
+HL201  `jnp.*`/`jax.*` call in a host-loop function that is not pure
+       data movement (asarray/zeros/concatenate/.../device_get/
+       device_put/block_until_ready/jax.tree.*). Math belongs inside
+       the traced program; host-side jnp launches a device computation
+       per scheduler iteration.
+HL202  implicit device sync in a host-loop function: `int()`, `float()`,
+       `bool()`, `np.asarray`/`np.array`, `.item()` on a value tainted
+       as a device array, or branching (`if`/`while`/`assert`) on one.
+       The blessed read is explicit `jax.device_get` (its result is
+       host data and clears the taint).
+HL203  `PageAllocator`/`PrefixIndex`/`SwapStore` mutation reachable from
+       a traced function — allocator state must only change on the host
+       between steps.
+HL204  `raise PoolExhausted` inside a traced function — the pool-dry
+       signal must fire before tracing (a traced raise is a concrete
+       error at trace time, not a schedulable event).
+HL205  a `jax.jit`/`lax.scan`/`lax.while_loop`/`lax.cond` target that is
+       not in the module's `traced` annotation (and not nested inside a
+       traced function) — every traced entry point must be declared so
+       the other checks know the host/device boundary. A module without
+       `__analysis__` fails wholesale.
+
+Taint for HL202 is a per-function fixpoint over simple names and
+attribute chains: seeds are `jnp.*`/`jax.*` call results (minus
+`device_get`/`block_until_ready`), calls through jitted attributes
+(`self.X` where `self.X = jax.jit(...)` anywhere in the module),
+annotated `device_returning` call chains, and annotated `device_params`;
+taint flows through assignment, tuple unpacking, containers, subscript
+*reads* (of the container — a tainted index into a host array is not a
+sync), comprehensions (generator targets bound from their iterables),
+accessor methods (`TAINT_METHODS`), and `append`-style mutation. Other
+method calls are assumed host-returning, and bare-name truthiness tests
+are host `len()` checks — both deliberate precision-over-recall calls
+(docs/analysis.md). Nested `def`s are analyzed inside their parent's
+environment (closures share the loop's variables).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import (Finding, HL_LOOP_NUMERIC, HL_LOOP_SYNC,
+                                     HL_TRACED_MUT, HL_TRACED_RAISE,
+                                     HL_UNANNOTATED)
+
+#: the serving-stack host modules the CLI lints by default (repo-relative)
+DEFAULT_TARGETS = (
+    "src/repro/launch/serve.py",
+    "src/repro/launch/prefill.py",
+    "src/repro/models/paging.py",
+)
+
+ALLOWED_HOST_CALLS = frozenset({
+    "asarray", "array", "zeros", "ones", "full", "arange", "concatenate",
+    "stack", "broadcast_to", "device_get", "device_put",
+    "block_until_ready", "int32", "int64", "float32", "int8", "uint8",
+    "bool_",
+})
+UNTAINTING = frozenset({"device_get", "block_until_ready"})
+PASSTHROUGH = frozenset({"list", "tuple", "dict", "set", "sorted",
+                         "reversed", "zip", "enumerate", "min", "max"})
+MUTATING_METHODS = frozenset({"append", "extend", "add", "insert",
+                              "update", "setdefault"})
+#: methods whose result carries the receiver's taint (container
+#: accessors and functional array updates). Any *other* method call is
+#: assumed host-returning — the linter trades recall for precision here:
+#: a host object that internally stores device arrays (e.g. the prefix
+#: index) returns mostly host metadata, and tainting every method result
+#: floods the whole loop (see docs/analysis.md, HL202 limitations).
+TAINT_METHODS = frozenset({"items", "values", "get", "pop", "popitem",
+                           "copy", "set", "astype", "reshape"})
+SYNC_BUILTINS = frozenset({"int", "float", "bool"})
+NP_SINKS = frozenset({"np.asarray", "np.array", "numpy.asarray",
+                      "numpy.array"})
+ALLOC_TYPES = frozenset({"PageAllocator", "PrefixIndex", "SwapStore"})
+ALLOC_MUTATORS = frozenset({"alloc", "share", "release", "free", "insert",
+                            "invalidate", "put", "pop", "cancel"})
+
+
+def _chain(node) -> Optional[str]:
+    """Dotted-name string of a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _own_nodes(fn: ast.AST):
+    """Walk a function body without descending into nested function or
+    class definitions (those are attributed to their own qualnames)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+class _Module:
+    """Parsed module index: qualnamed functions, nesting, jitted attrs,
+    allocator-typed bindings, every call site with its context."""
+
+    def __init__(self, path: str, rel: str):
+        with open(path) as fh:
+            self.tree = ast.parse(fh.read(), filename=path)
+        self.rel = rel
+        self.funcs: Dict[str, ast.AST] = {}
+        self.parents: Dict[str, Optional[str]] = {}
+        self.owner: Dict[str, Optional[str]] = {}
+        self.jit_attrs: Set[str] = set()
+        self.alloc_refs: Set[str] = set()       # names/attrs of allocators
+        self.calls: List[Tuple[ast.Call, Optional[str],
+                               Optional[str]]] = []
+        self.ann: Optional[dict] = None
+        for node in self.tree.body:
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "__analysis__"
+                    for t in node.targets):
+                self.ann = ast.literal_eval(node.value)
+        self._walk(self.tree, None, None)
+
+    def _record_assign(self, node: ast.Assign) -> None:
+        if not isinstance(node.value, ast.Call):
+            return
+        ch = _chain(node.value.func)
+        if ch is None:
+            return
+        final = ch.split(".")[-1]
+        for tgt in node.targets:
+            tch = _chain(tgt)
+            if tch is None:
+                continue
+            attr = tch.split(".")[-1]
+            if final == "jit" and ch.startswith("jax"):
+                self.jit_attrs.add(attr)
+            if final in ALLOC_TYPES:
+                self.alloc_refs.add(attr)
+
+    def _walk(self, node, cls: Optional[str], fnq: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                self._walk(child, child.name, None)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if fnq is not None:
+                    q = f"{fnq}.{child.name}"
+                elif cls is not None:
+                    q = f"{cls}.{child.name}"
+                else:
+                    q = child.name
+                self.funcs[q] = child
+                self.parents[q] = fnq
+                self.owner[q] = cls
+                self._walk(child, cls, q)
+            else:
+                if isinstance(child, ast.Assign):
+                    self._record_assign(child)
+                if isinstance(child, ast.Call):
+                    self.calls.append((child, cls, fnq))
+                self._walk(child, cls, fnq)
+
+
+# ----------------------------------------------------------------- scopes
+
+def _traced_scope(m: _Module, traced: Sequence[str]) -> Set[str]:
+    """Local traced functions closed over nesting and simple-name calls."""
+    scope = {q for q in traced if q in m.funcs}
+    changed = True
+    while changed:
+        changed = False
+        for q in m.funcs:
+            if q in scope:
+                continue
+            if m.parents[q] in scope:        # nested def under a traced fn
+                scope.add(q)
+                changed = True
+        for q in list(scope):
+            for node in _own_nodes(m.funcs[q]):
+                if not isinstance(node, ast.Call):
+                    continue
+                ch = _chain(node.func)
+                if ch is None:
+                    continue
+                cand = None
+                if ch in m.funcs:
+                    cand = ch
+                elif ch.startswith("self.") and ch.count(".") == 1 \
+                        and m.owner.get(q):
+                    qual = f"{m.owner[q]}.{ch[5:]}"
+                    if qual in m.funcs:
+                        cand = qual
+                if cand and cand not in scope:
+                    scope.add(cand)
+                    changed = True
+    return scope
+
+
+# ------------------------------------------------------- HL203 / HL204
+
+def _check_traced(m: _Module, scope: Set[str]) -> List[Finding]:
+    out = []
+    for q in sorted(scope):
+        for node in _own_nodes(m.funcs[q]):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ALLOC_MUTATORS:
+                base = _chain(node.func.value)
+                if base and base.split(".")[-1] in m.alloc_refs:
+                    out.append(Finding(
+                        HL_TRACED_MUT, m.rel, node.lineno, q,
+                        f"`{base}.{node.func.attr}(...)` mutates "
+                        f"allocator state from a traced function — "
+                        f"allocator updates belong on the host between "
+                        f"steps"))
+            if isinstance(node, ast.Raise) and node.exc is not None:
+                exc = node.exc.func if isinstance(node.exc, ast.Call) \
+                    else node.exc
+                ech = _chain(exc)
+                if ech and ech.split(".")[-1] == "PoolExhausted":
+                    out.append(Finding(
+                        HL_TRACED_RAISE, m.rel, node.lineno, q,
+                        "`raise PoolExhausted` inside a traced function "
+                        "— the pool-dry signal must fire host-side "
+                        "before tracing"))
+    return out
+
+
+# --------------------------------------------------------------- HL205
+
+_TRACE_ENTRY = {
+    "jit": (0, 1), "scan": (0, 1), "while_loop": (0, 2), "cond": (1, 3),
+}
+
+
+def _check_entry_points(m: _Module, traced: Sequence[str],
+                        scope: Set[str]) -> List[Finding]:
+    out = []
+    for call, cls, fnq in m.calls:
+        ch = _chain(call.func)
+        if ch is None or not (ch.startswith("jax") or
+                              ch.startswith("lax.")):
+            continue
+        final = ch.split(".")[-1]
+        if final not in _TRACE_ENTRY:
+            continue
+        if final != "jit" and ".lax." not in ch and not \
+                ch.startswith("lax."):
+            continue
+        lo, hi = _TRACE_ENTRY[final]
+        for tgt in call.args[lo:hi]:
+            if fnq in scope:
+                break                # jit/scan inside already-traced code
+            tch = _chain(tgt)
+            ok = False
+            if tch:
+                if tch in traced:
+                    ok = True
+                elif tch.startswith("self.") and cls \
+                        and f"{cls}.{tch[5:]}" in traced:
+                    ok = True
+                elif fnq and f"{fnq}.{tch}" in scope:
+                    ok = True        # nested def of a traced parent
+            elif isinstance(tgt, ast.Lambda):
+                ok = fnq in scope
+            if not ok:
+                out.append(Finding(
+                    HL_UNANNOTATED, m.rel, call.lineno, fnq or m.rel,
+                    f"`{ch}` target `{tch or '<dynamic>'}` is not listed "
+                    f"in this module's __analysis__ 'traced' annotation"))
+    return out
+
+
+# ------------------------------------------------------ HL201 / HL202
+
+class _HostFnLint:
+    def __init__(self, m: _Module, q: str):
+        self.m = m
+        self.q = q
+        self.fn = m.funcs[q]
+        ann = m.ann or {}
+        self.dev_returning = tuple(ann.get("device_returning", ()))
+        self.host_objects = frozenset(ann.get("host_objects", ()))
+        self.taint: Set[str] = set()
+        prefix = f"{q}."
+        for entry in ann.get("device_params", ()):
+            if entry.startswith(prefix):
+                self.taint.add(entry[len(prefix):])
+
+    # ------------------------------------------------------- expressions
+    def _call_tainted(self, e: ast.Call) -> bool:
+        ch = _chain(e.func)
+        if ch:
+            parts = ch.split(".")
+            root, final = parts[0], parts[-1]
+            if root in ("jax", "jnp"):
+                return final not in UNTAINTING
+            if ch.startswith("self.") and len(parts) == 2 \
+                    and parts[1] in self.m.jit_attrs:
+                return True
+            if any(ch == d or ch.endswith("." + d)
+                   for d in self.dev_returning):
+                return True
+            if ch in PASSTHROUGH:
+                return any(self._tainted(a) for a in e.args)
+            if ch in NP_SINKS or ch in SYNC_BUILTINS or final == "item":
+                return False         # sinks produce host values
+        if isinstance(e.func, ast.Attribute) \
+                and e.func.attr in TAINT_METHODS \
+                and self._tainted(e.func.value):
+            return True              # accessor on a tainted object
+        return False
+
+    def _tainted(self, e) -> bool:
+        if e is None:
+            return False
+        if isinstance(e, ast.Name):
+            return e.id in self.taint
+        if isinstance(e, ast.Attribute):
+            ch = _chain(e)
+            return (ch in self.taint) or self._tainted(e.value)
+        if isinstance(e, ast.Subscript):
+            return self._tainted(e.value)
+        if isinstance(e, ast.Call):
+            return self._call_tainted(e)
+        if isinstance(e, ast.BinOp):
+            return self._tainted(e.left) or self._tainted(e.right)
+        if isinstance(e, ast.BoolOp):
+            return any(self._tainted(v) for v in e.values)
+        if isinstance(e, ast.Compare):
+            return self._tainted(e.left) or any(
+                self._tainted(c) for c in e.comparators)
+        if isinstance(e, ast.UnaryOp):
+            return self._tainted(e.operand)
+        if isinstance(e, ast.IfExp):
+            return any(self._tainted(x) for x in (e.body, e.orelse))
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self._tainted(x) for x in e.elts)
+        if isinstance(e, ast.Dict):
+            return any(self._tainted(x) for x in e.values if x) or any(
+                self._tainted(x) for x in e.keys if x)
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                          ast.DictComp)):
+            return self._comp_tainted(e)
+        if isinstance(e, ast.Starred):
+            return self._tainted(e.value)
+        if isinstance(e, ast.NamedExpr):
+            return self._tainted(e.value)
+        return False
+
+    def _comp_tainted(self, e) -> bool:
+        """A comprehension is tainted iff its *element* is — with the
+        generator targets bound from their iterables first, so
+        `[t for _, t in history]` (device tokens) is tainted while
+        `[(i, s) for i, (a, _) in enumerate(history)]` (host indices
+        into a tainted container) is not."""
+        added: List[str] = []
+        try:
+            for g in e.generators:       # in order: later iters may use
+                if not self._tainted(g.iter):    # earlier targets
+                    continue
+                for n in ast.walk(g.target):
+                    if isinstance(n, ast.Name) and n.id not in self.taint \
+                            and n.id not in self.host_objects:
+                        self.taint.add(n.id)
+                        added.append(n.id)
+            if isinstance(e, ast.DictComp):
+                return self._tainted(e.key) or self._tainted(e.value)
+            return self._tainted(e.elt)
+        finally:
+            for name in added:
+                self.taint.discard(name)
+
+    # -------------------------------------------------------- statements
+    def _bind(self, target) -> None:
+        if isinstance(target, ast.Name):
+            if target.id not in self.host_objects:
+                self.taint.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for t in target.elts:
+                self._bind(t)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value)
+        elif isinstance(target, ast.Attribute):
+            ch = _chain(target)
+            if ch:
+                self.taint.add(ch)
+        elif isinstance(target, ast.Subscript):
+            self._bind(target.value)     # writing into a container taints it
+
+    def _propagate_once(self) -> int:
+        before = len(self.taint)
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Assign):
+                val_t = self._tainted(node.value)
+                if len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Tuple) \
+                        and isinstance(node.value, ast.Tuple) \
+                        and len(node.targets[0].elts) == \
+                        len(node.value.elts):
+                    for t, v in zip(node.targets[0].elts,
+                                    node.value.elts):
+                        if self._tainted(v):
+                            self._bind(t)
+                elif val_t:
+                    for t in node.targets:
+                        self._bind(t)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                if self._tainted(node.value):
+                    self._bind(node.target)
+            elif isinstance(node, ast.AugAssign):
+                if self._tainted(node.value) or self._tainted(node.target):
+                    self._bind(node.target)
+            elif isinstance(node, ast.For):
+                if self._tainted(node.iter):
+                    self._bind(node.target)
+            elif isinstance(node, ast.NamedExpr):
+                if self._tainted(node.value):
+                    self._bind(node.target)
+            elif isinstance(node, ast.withitem):
+                if node.optional_vars is not None \
+                        and self._tainted(node.context_expr):
+                    self._bind(node.optional_vars)
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in MUTATING_METHODS:
+                if any(self._tainted(a) for a in node.args):
+                    self._bind(node.func.value)
+        return len(self.taint) - before
+
+    # -------------------------------------------------------------- emit
+    def run(self) -> List[Finding]:
+        for _ in range(16):              # fixpoint (loops carry taint back)
+            if self._propagate_once() == 0:
+                break
+        out = []
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Call):
+                ch = _chain(node.func)
+                if ch:
+                    parts = ch.split(".")
+                    if parts[0] in ("jax", "jnp"):
+                        if parts[-1] not in ALLOWED_HOST_CALLS \
+                                and "tree" not in parts:
+                            out.append(Finding(
+                                HL_LOOP_NUMERIC, self.m.rel, node.lineno,
+                                self.q,
+                                f"`{ch}` in the host scheduler loop — "
+                                f"device math belongs inside the traced "
+                                f"step, not per host iteration"))
+                    if ch in NP_SINKS and any(self._tainted(a)
+                                              for a in node.args):
+                        out.append(self._sync(node, f"`{ch}`"))
+                    if ch in SYNC_BUILTINS and any(self._tainted(a)
+                                                   for a in node.args):
+                        out.append(self._sync(node, f"`{ch}()`"))
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" \
+                        and self._tainted(node.func.value):
+                    out.append(self._sync(node, "`.item()`"))
+            elif isinstance(node, (ast.If, ast.While)) \
+                    and self._test_syncs(node.test):
+                out.append(self._sync(node, "branching"))
+            elif isinstance(node, ast.Assert) \
+                    and self._test_syncs(node.test):
+                out.append(self._sync(node, "asserting"))
+        return out
+
+    def _test_syncs(self, test) -> bool:
+        """Does this branch condition read device bytes? Truthiness of a
+        bare (possibly tainted) name is a host `len()` check on a
+        container that merely *holds* device arrays — only comparisons,
+        subscript reads, calls and arithmetic over tainted values force
+        a device round trip."""
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return self._test_syncs(test.operand)
+        if isinstance(test, ast.BoolOp):
+            return any(self._test_syncs(v) for v in test.values)
+        if isinstance(test, (ast.Name, ast.Attribute)):
+            return False
+        if isinstance(test, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+            return False             # identity test — never reads bytes
+        return self._tainted(test)
+
+    def _sync(self, node, what: str) -> Finding:
+        return Finding(
+            HL_LOOP_SYNC, self.m.rel, node.lineno, self.q,
+            f"{what} on a device array in the host scheduler loop is an "
+            f"implicit sync — read it explicitly with jax.device_get "
+            f"(batched, off the per-step path)")
+
+
+# ----------------------------------------------------------------- entry
+
+def _repo_root() -> str:
+    return os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "..", "..", ".."))
+
+
+def lint_file(path: str, rel: Optional[str] = None) -> List[Finding]:
+    rel = rel or path
+    m = _Module(path, rel)
+    if m.ann is None:
+        return [Finding(HL_UNANNOTATED, rel, 1, rel,
+                        "module has no __analysis__ annotation — declare "
+                        "its traced / host-loop topology (docs/analysis.md)")]
+    traced = tuple(m.ann.get("traced", ()))
+    scope = _traced_scope(m, traced)
+    out = _check_entry_points(m, traced, scope)
+    out += _check_traced(m, scope)
+    for q in m.ann.get("host_loop", ()):
+        if q not in m.funcs:
+            out.append(Finding(
+                HL_UNANNOTATED, rel, 1, rel,
+                f"__analysis__ host_loop entry {q!r} names no function "
+                f"in this module"))
+            continue
+        out += _HostFnLint(m, q).run()
+    return sorted(out, key=lambda f: (f.file, f.line, f.check))
+
+
+def lint_all(targets: Sequence[str] = DEFAULT_TARGETS,
+             root: Optional[str] = None) -> List[Finding]:
+    root = root or _repo_root()
+    out = []
+    for rel in targets:
+        out += lint_file(os.path.join(root, rel), rel)
+    return out

@@ -39,6 +39,31 @@ def _on_tpu() -> bool:
 # bk=None to defer here (CachedTensor.bk overrides per cache config)
 DEFAULT_BK = 128
 
+# ----------------------------------------------------------------------
+# repro.analysis registration: which code is *allowed* to turn packed
+# §5.1 planes back into floats, and which dispatchers the jaxpr auditor
+# traces as standalone hot programs.
+# ----------------------------------------------------------------------
+
+#: source-path fragments whose int->float conversions are the blessed
+#: meta-decode. Everything under repro/kernels/ qualifies: the fused
+#: pallas kernels decode tile-by-tile in-loop, and the ref.py oracles
+#: are their bit-exact jnp counterparts. A float cast of a packed plane
+#: anywhere else is a whole-plane dequantize the format exists to avoid
+#: (analysis check JX102).
+META_DECODE_SOURCES = ("repro/kernels/",)
+
+#: public dispatcher names the analysis registry audits as hot programs
+#: (each is traced abstractly with engine-shaped packed planes).
+HOT_DISPATCHERS = (
+    "quantized_matmul",
+    "sparq_quantize",
+    "sparq_dequantize",
+    "sparq_decode_attention",
+    "sparq_chunked_prefill_attention",
+    "sparq_paged_decode_attention",
+)
+
 
 def _pad_to(x: jnp.ndarray, mult: int, axis: int,
             value: float = 0) -> jnp.ndarray:

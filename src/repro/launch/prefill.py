@@ -58,6 +58,15 @@ import numpy as np
 
 from repro.models.paging import ChunkMeta
 
+# host/device topology for the static analyzer (repro.analysis.host_lint;
+# see docs/analysis.md). Pure literal — parsed with ast.literal_eval.
+__analysis__ = {
+    "traced": ("PrefillScheduler._chunk_fn",),
+    "host_loop": ("PrefillScheduler.plan", "PrefillScheduler.run"),
+    "device_returning": (),
+    "device_params": ("PrefillScheduler.run.caches",),
+}
+
 
 @dataclasses.dataclass
 class _Job:

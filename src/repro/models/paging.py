@@ -50,6 +50,29 @@ import numpy as np
 from repro.core.sparq import SparqConfig
 from repro.models.cache import CacheConfig, CacheStore
 
+# host/device topology for the static analyzer (repro.analysis.host_lint;
+# see docs/analysis.md). Pure literal — parsed with ast.literal_eval.
+__analysis__ = {
+    "traced": (
+        "PagedCacheStore.update",
+        "PagedCacheStore.write_chunk",
+        "PagedCacheStore._resolve_scale",
+        "PagedCacheStore._resolve_chunk_scale",
+        "PagedCacheStore._encode",
+        "paged_decode_attention",
+        "chunked_prefill_attention",
+        "adopt_prefill",
+        "copy_page",
+        "adopt_prefix_scales",
+        "evict_slot",
+        "gather_slot_pages",
+        "restore_slot_pages",
+    ),
+    "host_loop": ("SwapStore.put", "SwapStore._to_host", "SwapStore.pop"),
+    "device_returning": (),
+    "device_params": ("SwapStore.put.groups", "SwapStore._to_host.groups"),
+}
+
 
 class PoolExhausted(RuntimeError):
     """Raised host-side (before tracing) when the page pool runs dry."""
@@ -817,11 +840,10 @@ class SwapStore:
 
     @staticmethod
     def _to_host(groups) -> Tuple[List[dict], int]:
-        host, nbytes = [], 0
-        for planes in groups:
-            hp = {k: np.asarray(v) for k, v in planes.items()}
-            nbytes += sum(int(a.nbytes) for a in hp.values())
-            host.append(hp)
+        # one explicit fetch of the whole pytree — per-plane np.asarray
+        # is an implicit sync per plane on the scheduler path (HL202)
+        host = jax.device_get([dict(planes) for planes in groups])
+        nbytes = sum(int(a.nbytes) for hp in host for a in hp.values())
         return host, nbytes
 
     def put(self, key: int, groups: Sequence[dict], pos: int) -> int:

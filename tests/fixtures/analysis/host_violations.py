@@ -1,0 +1,45 @@
+"""Seeded host-discipline violations — one per HL check ID.
+
+Linted AST-only by tests/test_analysis.py (never imported/executed);
+each construct below fires its check exactly once and nothing else.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.paging import PageAllocator, PoolExhausted
+
+__analysis__ = {
+    "traced": ("FakeEngine._step_fn",),
+    "host_loop": ("FakeEngine.run",),
+    "device_returning": (),
+    "device_params": (),
+    "host_objects": (),
+}
+
+
+class FakeEngine:
+    def __init__(self):
+        self.allocator = PageAllocator(4)
+        self._step = jax.jit(self._step_fn)
+
+    def _step_fn(self, tok):
+        self.allocator.release([0])             # HL203: traced mutation
+        if tok.shape[0] == 0:
+            raise PoolExhausted("dry inside the trace")     # HL204
+        return tok + 1
+
+    def run(self, tok):
+        out = []
+        while len(out) < 4:
+            tok = self._step(tok)
+            z = jnp.sum(tok)                    # HL201: loop device math
+            out.append(int(np.asarray(tok[0])))  # HL202: implicit sync
+        return out, z
+
+
+def _double(x):
+    return x * 2
+
+
+fast_double = jax.jit(_double)                  # HL205: undeclared target

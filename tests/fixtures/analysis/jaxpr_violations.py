@@ -1,0 +1,77 @@
+"""Seeded jaxpr-auditor violations — one program per JX check ID.
+
+Each function below, registered as a ProgramSpec by tests/test_analysis.py,
+trips exactly one check and nothing else; the test asserts the exact
+finding multiset so a dead check (or a check firing twice) is loud.
+These are traced abstractly only — never executed.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sink(x):  # pragma: no cover - host side of the seeded callback
+    del x
+
+
+def hostcall(x):
+    """JX101: a host callback inside a hot program."""
+    jax.debug.callback(_sink, x)
+    return x + 1
+
+
+def packed_cast(codes):
+    """JX102: packed int8 codes decoded to float outside any kernel.
+
+    `codes` is an int8 plane; the astype is the stray full-plane
+    materialization the packed format forbids on the hot path."""
+    return codes.astype(jnp.float32) * 0.5
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def tile_misdivide(x):
+    """JX103: the input block (32, 16) does not divide x's (48, 16)."""
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct((64, 16), x.dtype),
+        grid=(2,),
+        in_specs=[pl.BlockSpec((32, 16), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((32, 16), lambda i: (i, 0)),
+        interpret=True)(x)
+
+
+def _decode_kernel(p_ref, o_ref):
+    # float conversion *inside* the kernel: legal (not JX102)
+    o_ref[...] = p_ref[...].astype(jnp.float32)
+
+
+def page_tile_mismatch(planes):
+    """JX104: int8 plane tiled at 8 rows/page in a program whose spec
+    declares page_size=16 — the paged read no longer aligns to pages."""
+    return pl.pallas_call(
+        _decode_kernel,
+        out_shape=jax.ShapeDtypeStruct(planes.shape, jnp.float32),
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((1, 8, 2, 8), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 8, 2, 8), lambda i, j: (i, j, 0, 0)),
+        interpret=True)(planes)
+
+
+def vmem_hog(x):
+    """JX105 (under a small test budget): whole-array blocks."""
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        interpret=True)(x)
+
+
+def shape_polymorphic(x):
+    """JX106 when registered with a two-length shape set: one jit
+    signature per length, i.e. the per-shape retrace JX106 forbids."""
+    return x * 2

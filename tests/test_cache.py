@@ -259,6 +259,20 @@ def test_sparq_decode_never_reads_full_plane(tiny_lm, monkeypatch):
         f"decode step dequantized a full sparq plane: {read_layouts}"
 
 
+def test_packed_planes_never_decoded_statically():
+    """Static counterpart of the read()-spy smoke above: the jaxpr
+    auditor walks every registered hot program (both decode engines,
+    the chunk program, every fused dispatcher) and proves no packed
+    int8 plane is cast to float outside a pallas kernel (JX102) — the
+    spy covers one dynamic path, this covers them all."""
+    from repro.analysis import audit_all
+    from repro.analysis.registry import default_programs
+    findings, counters = audit_all(default_programs())
+    assert not [f for f in findings if f.check == "JX102"], \
+        [f.format() for f in findings]
+    assert counters["programs_traced"] >= 10
+
+
 def test_fused_decode_matches_dequant_path_greedy(tiny_lm, monkeypatch):
     """Acceptance: the fused decode path produces exactly the PR 1
     dequantize-path greedy tokens (int8 grid: bit-identical storage; 5opt:

@@ -131,6 +131,29 @@ def _cc(codec=None):
         CacheConfig.sparq_cache(codec, impl="reference"), attn_bk=PS)
 
 
+def _guard_transfers(eng):
+    """Run the engine's jitted step/chunk entry points under
+    `jax.transfer_guard("disallow")`: every argument must already live
+    on device, so an implicit host->device transfer sneaking into the
+    per-step dispatch path fails loudly here (the static counterpart is
+    HL202 in `python -m repro.analysis`)."""
+    import functools
+
+    def wrap(fn):
+        @functools.wraps(fn)
+        def guarded(*a, **k):
+            with jax.transfer_guard("disallow"):
+                return fn(*a, **k)
+        if hasattr(fn, "_cache_size"):      # compile_count reads this
+            guarded._cache_size = fn._cache_size
+        return guarded
+
+    eng._step = wrap(eng._step)
+    if eng._sched is not None:
+        eng._sched._chunk = wrap(eng._sched._chunk)
+    return eng
+
+
 def _make_trace(seed: int, n_req: int, vocab: int):
     """Seeded arrival/length trace: ragged prompts, ragged token budgets
     (eviction times), staggered arrivals."""
@@ -272,6 +295,7 @@ def test_trace_invariants_and_token_equality(tiny_lm, trace, oracle,
         max_seq_len=24,
         policy=SchedulerPolicy(preempt=policy_mode, victim="last_joined"),
         prefill=prefill, chunk_size=16, chunk_align=4)
+    _guard_transfers(eng)
     check = InvariantChecker(ps=PS)
     results, stats = eng.run(params, trace, trace_hook=check)
     assert check.steps == stats["decode_steps"] > 0
