@@ -468,12 +468,111 @@ def shared_prefix_rows(out_json: str = "BENCH_prefix.json",
     return rows
 
 
+def sharded_serving_rows(out_json: str = "BENCH_tp.json",
+                         impls: tuple = ("reference",)) -> list:
+    """Tensor-parallel paged serving -> BENCH_tp.json.
+
+    Sweeps the TP degree over whatever devices are visible (CI forces 8
+    CPU devices with XLA_FLAGS=--xla_force_host_platform_device_count=8;
+    a bare single-device run still emits the tp=1 row) on the reduced
+    tinyllama widened to 8 KV heads, chunked prefill + prefix cache on.
+    Per degree: steady decode tok/s, modeled per-device pool bytes
+    (packed data+ctrl shard 1/tp, bookkeeping replicated — see
+    docs/sharding.md), and peak pool pages (a global scheduler figure:
+    the host-side allocator does not know about tp). Greedy tokens are
+    asserted bit-identical to tp=1 at every degree.
+    """
+    import numpy as np
+
+    from repro.core.sparq import SparqConfig
+    from repro.launch import serve as serve_mod
+    from repro.launch.mesh import make_tp_mesh
+    from repro.models.cache import CacheConfig
+    from repro.models.model import Model
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_reduced_config
+
+    cfg_m = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False, n_heads=16, n_kv_heads=8)
+    model = Model(cfg_m)
+    params = model.init_params(jax.random.PRNGKey(0))
+    impl = impls[0]
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True), impl=impl)
+
+    n_dev = len(jax.devices())
+    degrees = [1] + [tp for tp in (2, 4, 8)
+                     if tp <= n_dev and n_dev % tp == 0]
+    if degrees == [1]:
+        print("# sharded_serving: single device visible — tp=1 only "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+              file=sys.stderr)
+
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg_m.vocab_size, (8,))
+    reqs = []
+    for i in range(6):
+        tail = rng.integers(0, cfg_m.vocab_size, (int(rng.integers(2, 6)),))
+        reqs.append(serve_mod.Request(
+            np.concatenate([shared, tail]), int(rng.integers(8, 13)),
+            arrive_at=2 * i))
+
+    def bench(tp):
+        eng = serve_mod.ContinuousBatchingEngine(
+            model, cc, page_size=4, n_pages=24, max_active=3,
+            max_seq_len=24, prefill="chunked", chunk_size=16,
+            chunk_align=4, chunk_seg=2, prefix_cache=True,
+            mesh=make_tp_mesh(tp) if tp > 1 else None)
+        results, _ = eng.run(params, reqs)           # cold: compiles
+        _, stats = eng.run(params, reqs)             # steady: warm
+        assert stats["tp"] == tp
+        blob = {
+            "decode_tok_s": round(stats["decode_tok_s"], 2),
+            "pool_bytes_per_device": int(stats["pool_bytes_per_device"]),
+            "peak_pages_used": stats["peak_pages_used"],
+            "prefix_hits": stats["prefix_hits"],
+        }
+        return results, blob
+
+    base, per_tp = None, {}
+    for tp in degrees:
+        results, blob = bench(tp)
+        per_tp[tp] = blob
+        if base is None:
+            base = results
+        else:                                        # bit-identical to tp=1
+            for rid in base:
+                np.testing.assert_array_equal(results[rid], base[rid])
+    for tp in degrees[1:]:
+        # packed bytes shard 1/tp; only replicated bookkeeping remains
+        assert per_tp[tp]["pool_bytes_per_device"] < \
+            per_tp[1]["pool_bytes_per_device"], per_tp
+        assert per_tp[tp]["peak_pages_used"] == \
+            per_tp[1]["peak_pages_used"], "allocator is tp-independent"
+
+    blob = {"impl": impl, "n_devices": n_dev, "degrees": degrees,
+            "requests": len(reqs), "tokens_identical_to_tp1": True,
+            "per_tp": {str(tp): per_tp[tp] for tp in degrees}}
+    rows = []
+    for tp in degrees:
+        cfg_name = f"tinyllama_reduced_tp{tp}"
+        rows += [(cfg_name, "decode_tok_s", per_tp[tp]["decode_tok_s"]),
+                 (cfg_name, "pool_bytes_per_device",
+                  per_tp[tp]["pool_bytes_per_device"]),
+                 (cfg_name, "peak_pages_used",
+                  per_tp[tp]["peak_pages_used"])]
+    _dump(out_json, blob)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
                     default="1,2,3,4,5,6,stats,serve,decode_cache,"
                             "paged_serving,oversubscribed_serving,"
-                            "prefill_saturation,shared_prefix")
+                            "prefill_saturation,shared_prefix,"
+                            "sharded_serving")
     ap.add_argument("--decode-impls", default="reference,pallas",
                     help="fused-decode impls to sweep in decode_cache "
                          "(pallas runs in interpret mode off-TPU: exact "
@@ -537,6 +636,10 @@ def main() -> None:
     if "shared_prefix" in want:
         # shared-prefix page reuse: cache off vs on -> BENCH_prefix.json
         common.emit("shared_prefix", shared_prefix_rows(
+            impls=tuple(args.decode_impls.split(","))))
+    if "sharded_serving" in want:
+        # tensor-parallel sweep: tok/s + per-device pool bytes vs tp
+        common.emit("sharded_serving", sharded_serving_rows(
             impls=tuple(args.decode_impls.split(","))))
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 

@@ -292,6 +292,16 @@ class _Auditor:
         p = eqn.params
         if name in ("pjit", "closed_call", "core_call", "xla_call"):
             return self._closed(p["jaxpr"], in_taint, inside_pallas)
+        if name == "shard_map":
+            # tensor-parallel body (jax.experimental.shard_map): the
+            # inner jaxpr sees per-shard shapes but identical positional
+            # structure, so taint maps through unchanged. The param is an
+            # open Jaxpr on current jax; handle ClosedJaxpr too.
+            j = p["jaxpr"]
+            if hasattr(j, "jaxpr"):
+                return self._closed(j, in_taint, inside_pallas)
+            return self.walk(j, in_taint, [False] * len(j.constvars),
+                             inside_pallas=inside_pallas)
         if name == "scan":
             # invars = consts ++ carry ++ xs; inner sees xs minus the
             # leading scan axis — positions are unchanged

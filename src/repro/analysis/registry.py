@@ -28,6 +28,11 @@ Programs:
                        like the paged reads that produced the tokens).
   ops.*                each kernels/ops.py dispatcher standalone, with
                        engine-shaped packed planes.
+  decode_step.paged_tp2 / prefill_chunk_tp2
+                       tensor-parallel (tp=2 shard_map over a
+                       ("data","model") mesh) variants of the paged step
+                       and chunk programs; registered only when >= 2
+                       devices are visible (the multidevice CI job).
 """
 from __future__ import annotations
 
@@ -144,6 +149,49 @@ def _paged_engine_specs(model, params) -> List[ProgramSpec]:
     return specs
 
 
+def _tp_engine_specs(model, params) -> List[ProgramSpec]:
+    """Tensor-parallel variants of the paged hot programs (tp=2 over a
+    ("data","model") host mesh) so JX101-JX106 gate the shard_map'd
+    decode step and prefill chunk too — the auditor walks into the
+    shard_map body (per-shard pools: KV/tp head groups). Registered only
+    when the process actually has >= 2 devices (the multidevice CI job
+    forces 8 on CPU); on a single-device run the sharded programs cannot
+    even build a mesh, and the plain-jit programs above still audit the
+    identical kernel bodies."""
+    if len(jax.devices()) < 2:
+        return []
+    from repro.launch.mesh import make_tp_mesh
+    from repro.launch.serve import ContinuousBatchingEngine
+    cc = dataclasses.replace(
+        CacheConfig.sparq_cache(_codec(), impl="pallas"),
+        attn_bk=PAGE_SIZE)
+    eng = ContinuousBatchingEngine(
+        model, cc, page_size=PAGE_SIZE, n_pages=N_PAGES,
+        max_active=MAX_ACTIVE, max_seq_len=MAX_SEQ_LEN,
+        prefill="chunked", chunk_size=CHUNK, chunk_align=ALIGN,
+        mesh=make_tp_mesh(2))
+    stores = jax.eval_shape(eng._init_stores)
+    specs: List[ProgramSpec] = []
+
+    step_args = (params, _sds((MAX_ACTIVE, 1), jnp.int32), stores,
+                 _sds((MAX_ACTIVE,), jnp.int32))
+    specs.append(ProgramSpec("decode_step.paged_tp2", eng._step_fn,
+                             [step_args, step_args],
+                             page_size=PAGE_SIZE))
+
+    meta = ChunkMeta(
+        seq_id=_sds((CHUNK,), jnp.int32), pos=_sds((CHUNK,), jnp.int32),
+        hist=_sds((CHUNK,), jnp.int32),
+        tile_seq=_sds((CHUNK // ALIGN,), jnp.int32),
+        seq_pos_after=_sds((MAX_ACTIVE,), jnp.int32))
+    chunk_args = (params, _sds((1, CHUNK), jnp.int32), stores, meta,
+                  _sds((MAX_ACTIVE,), jnp.int32))
+    specs.append(ProgramSpec("prefill_chunk_tp2", eng._sched._chunk_fn,
+                             [chunk_args, chunk_args],
+                             page_size=PAGE_SIZE))
+    return specs
+
+
 def _dispatcher_specs(model) -> List[ProgramSpec]:
     from repro.kernels import ops
     cfg = model.cfg
@@ -217,5 +265,6 @@ def default_programs() -> List[ProgramSpec]:
     specs: List[ProgramSpec] = []
     specs += _scan_engine_specs(model, params)
     specs += _paged_engine_specs(model, params)
+    specs += _tp_engine_specs(model, params)
     specs += _dispatcher_specs(model)
     return specs

@@ -255,6 +255,45 @@ def constrain_last(x: jnp.ndarray) -> jnp.ndarray:
     return constrain_axis(x, (2,))
 
 
+# ----------------------------------------------------------------------
+# paged-serving pool specs (tensor-parallel ContinuousBatchingEngine)
+# ----------------------------------------------------------------------
+
+def pool_plane_pspec(ndim: int) -> P:
+    """PartitionSpec for one packed §5.1 page-pool plane: the KV-head
+    axis (always ndim-2: [..., P, ps, KV, hd]) shards over the model
+    axis, everything else — pages, rows, head_dim, an optional leading
+    layer-stack axis — is replicated. Head groups never split because
+    the engine validates n_kv_heads % tp == 0 up front."""
+    entries = [None] * ndim
+    entries[ndim - 2] = TP
+    return P(*entries)
+
+
+def pool_plane_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    return NamedSharding(mesh, pool_plane_pspec(ndim))
+
+
+def paged_pool_pspecs(store) -> Any:
+    """A PagedCacheStore-shaped pytree of PartitionSpecs: packed data and
+    meta pools shard by KV head, bookkeeping (per-sequence scales, block
+    tables, positions) stays replicated — the host-side allocator/prefix
+    index/scheduler are global, so every device sees the same tables."""
+    import dataclasses as _dc
+    pools = {"k_data", "k_meta", "v_data", "v_meta"}
+    specs = {name: (pool_plane_pspec(getattr(store, name).ndim)
+                    if name in pools else P())
+             for name in ("k_data", "k_meta", "v_data", "v_meta",
+                          "k_scale", "v_scale", "block_table", "seq_pos")}
+    return _dc.replace(store, **specs)
+
+
+def paged_pool_shardings(store, mesh: Mesh) -> Any:
+    """Same tree with NamedShardings — ready for `jax.device_put`."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        paged_pool_pspecs(store))
+
+
 def constrain_batch(x: jnp.ndarray) -> jnp.ndarray:
     """Megatron-SP re-entry point: gather the sequence axis back (batch-only
     sharding) before the TP matmuls of a block. Without this, GSPMD keeps

@@ -19,6 +19,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.quantizer import QScale
 from repro.core.sparq import SparqConfig
@@ -63,6 +65,33 @@ HOT_DISPATCHERS = (
     "sparq_chunked_prefill_attention",
     "sparq_paged_decode_attention",
 )
+
+
+# ----------------------------------------------------------------------
+# tensor parallelism. The attention dispatchers shard along the KV-head
+# axis of the packed planes (GQA head order is KV-major, so H splits at
+# head-group boundaries whenever KV does): each mesh "model" shard holds
+# KV/tp head groups of every page and computes its heads' attention
+# locally — per-head flash accumulation never crosses heads, so shard
+# outputs are bit-identical to the same head slice of the TP=1 program.
+# Collectives happen only outside, at the QKV/output projections (the
+# caller re-replicates before the wo matmul; see models/attention.py).
+# ----------------------------------------------------------------------
+
+TP_AXIS = "model"
+
+
+def tp_size(mesh: Optional[Mesh]) -> int:
+    """Model-parallel degree of `mesh` (1 = no tensor parallelism)."""
+    if mesh is None or TP_AXIS not in mesh.axis_names:
+        return 1
+    return mesh.shape[TP_AXIS]
+
+
+def _tp_guard(kv_heads: int, tp: int) -> None:
+    assert kv_heads % tp == 0, (
+        f"{kv_heads} KV heads do not split over tp={tp}: a head group "
+        f"(one KV head + its G query heads) never splits")
 
 
 def _pad_to(x: jnp.ndarray, mult: int, axis: int,
@@ -233,6 +262,7 @@ def sparq_decode_attention(
     window: int = 0,
     impl: str = "auto",
     bk: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
 ) -> jnp.ndarray:
     """Fused flash-decode attention over the raw packed SPARQ cache planes
     (§5.1 meta-decode inside the Tk-tile loop; no full-plane dequantize).
@@ -253,7 +283,20 @@ def sparq_decode_attention(
                decomposition determines f32 summation order; match it
                (bk == page_size) when comparing against the paged path
                bit for bit.
+      mesh:    optional ("data","model") Mesh — shard the head axis over
+               the "model" axis via shard_map (KV % tp must be 0).
     Returns f32 [B, 1, H, hd]."""
+    tp = tp_size(mesh)
+    if tp > 1:
+        _tp_guard(k_data.shape[2], tp)
+        head = P(None, None, TP_AXIS, None)
+        body = functools.partial(
+            sparq_decode_attention, window=window, impl=impl, bk=bk)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(head, head, head, P(), head, head, P(), P(), P()),
+            out_specs=head, check_rep=False,
+        )(q, k_data, k_meta, k_scale, v_data, v_meta, v_scale, kpos, cur)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "reference"
     B, Tq, H, hd = q.shape
@@ -305,6 +348,7 @@ def sparq_chunked_prefill_attention(
     window: int = 0,
     impl: str = "auto",
     bq: int = 8,
+    mesh: Optional[Mesh] = None,
 ) -> jnp.ndarray:
     """Ragged chunked-prefill flash attention over the §5.1 page pool.
 
@@ -319,7 +363,22 @@ def sparq_chunked_prefill_attention(
     the token's segment start, so per-prompt numerics are independent of
     stream packing (see kernels.ref.ref_sparq_chunked_prefill_attn).
 
-    Returns f32 (C, H, hd); padding rows (seq_id < 0) are zeros."""
+    Returns f32 (C, H, hd); padding rows (seq_id < 0) are zeros.
+    With `mesh`, heads/pools shard over the "model" axis (see tp_size)."""
+    tp = tp_size(mesh)
+    if tp > 1:
+        _tp_guard(k_data.shape[2], tp)
+        h2 = P(None, TP_AXIS, None)       # (C, H, hd) streams
+        h3 = P(None, None, TP_AXIS, None)  # (P, ps, KV, hd) pools
+        body = functools.partial(
+            sparq_chunked_prefill_attention, window=window, impl=impl, bq=bq)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(h2, h2, h2, h3, h3, P(), h3, h3, P(),
+                      P(), P(), P(), P(), P()),
+            out_specs=h2, check_rep=False,
+        )(q, k_chunk, v_chunk, k_data, k_meta, k_scale, v_data, v_meta,
+          v_scale, block_table, seq_id, pos, hist, tile_seq)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "reference"
     C, H, hd = q.shape
@@ -358,6 +417,7 @@ def sparq_paged_decode_attention(
                                # (< 0 = inactive slot, output is zeros)
     window: int = 0,
     impl: str = "auto",
+    mesh: Optional[Mesh] = None,
 ) -> jnp.ndarray:
     """Fused flash-decode attention over a *paged* packed SPARQ cache.
 
@@ -372,7 +432,20 @@ def sparq_paged_decode_attention(
     `cur` and the site scales are per-sequence: a continuous-batching step
     serves slots of different lengths (and different calibrations) in one
     traced call. No padding is needed — the pool geometry is static.
-    Returns f32 (B, 1, H, hd)."""
+    Returns f32 (B, 1, H, hd). With `mesh`, pools and heads shard over
+    the "model" axis; block table / cur / scales stay replicated."""
+    tp = tp_size(mesh)
+    if tp > 1:
+        _tp_guard(k_data.shape[2], tp)
+        head = P(None, None, TP_AXIS, None)
+        body = functools.partial(
+            sparq_paged_decode_attention, window=window, impl=impl)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(head, head, head, P(), head, head, P(), P(), P()),
+            out_specs=head, check_rep=False,
+        )(q, k_data, k_meta, k_scale, v_data, v_meta, v_scale,
+          block_table, cur)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "reference"
     B, Tq, H, hd = q.shape

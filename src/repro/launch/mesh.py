@@ -22,3 +22,19 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+def make_tp_mesh(tp: int):
+    """The serving `--tp N` path: a ("data","model") mesh with an N-way
+    model axis for the tensor-parallel paged engine. Validates the device
+    count up front with an actionable message (on CPU, force devices with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    n = len(jax.devices())
+    if tp < 1:
+        raise ValueError(f"--tp must be >= 1, got {tp}")
+    if n % tp != 0:
+        raise ValueError(
+            f"--tp {tp} does not divide the {n} visible jax devices; on "
+            f"CPU set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"before jax import to fake a multi-device host")
+    return make_host_mesh(model_parallel=tp)

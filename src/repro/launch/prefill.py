@@ -109,7 +109,7 @@ class PrefillScheduler:
 
     def __init__(self, model, ctx=None, scales_groups=None, *,
                  chunk_size: int = 32, align: int = 8, page_size: int,
-                 n_slots: int, seg: Optional[int] = None):
+                 n_slots: int, seg: Optional[int] = None, mesh=None):
         if chunk_size % align:
             raise ValueError(f"chunk_size {chunk_size} must be a multiple "
                              f"of the query-tile alignment {align}")
@@ -126,6 +126,14 @@ class PrefillScheduler:
         self.seg = seg
         self.ps = page_size
         self.S = n_slots
+        # tensor parallelism: chunk metadata and the token stream are
+        # global control state — placed replicated over the mesh so the
+        # chunk program (whose pools are head-sharded) sees committed,
+        # consistently-placed inputs (see docs/sharding.md). The
+        # NamedSharding is built once here, outside the host loop.
+        self.mesh = mesh
+        self._rep_sharding = None if mesh is None else \
+            jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
         self.jobs: List[_Job] = []          # FIFO
         self.chunks_run = 0
         # ONE jitted program serves every chunk: all shapes are fixed by
@@ -278,13 +286,18 @@ class PrefillScheduler:
         array — greedy token at each completing slot's last prompt row —
         , caches). The caches argument is donated (the pools are
         rewritten in place, like the engine's decode step)."""
+        if self._rep_sharding is None:
+            rep = lambda x: x
+        else:
+            rep = lambda x: jax.device_put(x, self._rep_sharding)
         meta = ChunkMeta(
-            seq_id=jnp.asarray(plan.seq_id, jnp.int32),
-            pos=jnp.asarray(plan.pos, jnp.int32),
-            hist=jnp.asarray(plan.hist, jnp.int32),
-            tile_seq=jnp.asarray(plan.tile_seq, jnp.int32),
-            seq_pos_after=jnp.asarray(seq_pos_after, jnp.int32))
+            seq_id=rep(jnp.asarray(plan.seq_id, jnp.int32)),
+            pos=rep(jnp.asarray(plan.pos, jnp.int32)),
+            hist=rep(jnp.asarray(plan.hist, jnp.int32)),
+            tile_seq=rep(jnp.asarray(plan.tile_seq, jnp.int32)),
+            seq_pos_after=rep(jnp.asarray(seq_pos_after, jnp.int32)))
         self.chunks_run += 1
-        return self._chunk(params, jnp.asarray(plan.tokens, jnp.int32)[None],
-                           caches, meta, jnp.asarray(plan.last_rows,
-                                                     jnp.int32))
+        return self._chunk(params,
+                           rep(jnp.asarray(plan.tokens, jnp.int32)[None]),
+                           caches, meta,
+                           rep(jnp.asarray(plan.last_rows, jnp.int32)))

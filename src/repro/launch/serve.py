@@ -382,7 +382,8 @@ class ContinuousBatchingEngine:
                  policy: Optional[SchedulerPolicy] = None,
                  prefill: str = "sequential", chunk_size: int = 32,
                  chunk_align: int = 8, chunk_seg: Optional[int] = None,
-                 prefix_cache: bool = False, prefix_min_pages: int = 1):
+                 prefix_cache: bool = False, prefix_min_pages: int = 1,
+                 mesh=None):
         if cache_cfg.layout != "sparq":
             raise ValueError("the paged engine stores packed §5.1 pages; "
                              "use --kv-cache sparq")
@@ -405,6 +406,22 @@ class ContinuousBatchingEngine:
                 "sequential admission freezes scales from the whole "
                 "prompt's range, so equal prefixes of different prompts "
                 "would not share bytes")
+        # tensor parallelism: a ("data","model") jax Mesh shards the page
+        # pools and attention heads over the "model" axis (head groups
+        # never split, so n_kv_heads must divide). The host-side
+        # allocator / prefix index / scheduler stay global — every device
+        # sees the same block tables, and swap/requeue move each device's
+        # local planes. See docs/sharding.md.
+        from repro.kernels.ops import tp_size
+        self.mesh = mesh
+        self.tp = tp_size(mesh)
+        self._rep_sharding = None if mesh is None else \
+            jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        if self.tp > 1 and model.cfg.n_kv_heads % self.tp:
+            raise ValueError(
+                f"--tp {self.tp} must divide n_kv_heads="
+                f"{model.cfg.n_kv_heads}: the packed (data, meta) planes "
+                f"shard by whole GQA head groups")
         self.model = model
         self.cc = cache_cfg
         self.ctx = ctx
@@ -432,7 +449,7 @@ class ContinuousBatchingEngine:
             self._sched = PrefillScheduler(
                 model, ctx, scales_groups, chunk_size=chunk_size,
                 align=chunk_align, page_size=page_size,
-                n_slots=max_active, seg=chunk_seg)
+                n_slots=max_active, seg=chunk_seg, mesh=mesh)
         self.prefix_cache = prefix_cache
         self.prefix_min_pages = max(1, prefix_min_pages)
         # prefix-match granularity: whole pages (only fully-written,
@@ -510,11 +527,28 @@ class ContinuousBatchingEngine:
         for kind, count in self.model.groups_meta:
             one = paging.PagedCacheStore.init(
                 self.max_active, self.n_pages, self.page_size,
-                self.n_blocks, cfg.n_kv_heads, cfg.head_dim, self.cc)
-            stores.append(jax.tree.map(
+                self.n_blocks, cfg.n_kv_heads, cfg.head_dim, self.cc,
+                mesh=self.mesh)
+            stacked = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (count,) + x.shape).copy(),
-                one))
+                one)
+            if self.mesh is not None:
+                # place the pools physically: packed planes sharded along
+                # the KV-head axis, bookkeeping replicated (the host
+                # scheduler is global, so every device needs the tables)
+                from repro.distributed.sharding import paged_pool_shardings
+                stacked = jax.device_put(
+                    stacked, paged_pool_shardings(stacked, self.mesh))
+            stores.append(stacked)
         return stores
+
+    def _replicated(self, x):
+        """Host->device placement for per-step scalars/tables under TP:
+        one explicit replicated device_put (the blessed transfer) instead
+        of letting the jitted step reshard a single-device array."""
+        if self._rep_sharding is None:
+            return x
+        return jax.device_put(x, self._rep_sharding)
 
     # ------------------------------------------------------------ trace
     @staticmethod
@@ -594,7 +628,11 @@ class ContinuousBatchingEngine:
                   "cow_copies": 0, "swap_refusals": 0}
         caches = self._init_stores()
         S = self.max_active
-        tok = jnp.zeros((S, 1), jnp.int32)
+        # under TP, pin params and the token vector replicated over the
+        # mesh once, up front — every jitted program then sees committed,
+        # consistently-placed inputs (no per-step implicit resharding)
+        params = self._replicated(params)
+        tok = self._replicated(jnp.zeros((S, 1), jnp.int32))
         slots: List[Optional[_Slot]] = [None] * S
         host_bt = np.full((S, NB), -1, np.int64)
         host_pos = np.full((S,), -1, np.int64)
@@ -782,7 +820,8 @@ class ContinuousBatchingEngine:
                 planes_np, pos = swap.pop(rec.rid)
                 pages_dev = jnp.asarray(pages, jnp.int32)
                 caches = [self._restore(
-                    c, {k: jnp.asarray(v) for k, v in pl.items()},
+                    c, {k: self._replicated(jnp.asarray(v))
+                        for k, v in pl.items()},
                     jnp.int32(s), pages_dev, jnp.int32(pos))
                     for c, pl in zip(caches, planes_np)]
                 jax.block_until_ready(caches[0].seq_pos)
@@ -1095,7 +1134,7 @@ class ContinuousBatchingEngine:
 
                 plan = sched.plan(prefill_budget, grant, host_bt)
                 if plan is not None:
-                    bt_dev = jnp.asarray(host_bt, jnp.int32)
+                    bt_dev = self._replicated(jnp.asarray(host_bt, jnp.int32))
                     caches = [dataclasses.replace(
                         c, block_table=jnp.broadcast_to(
                             bt_dev, c.block_table.shape))
@@ -1187,7 +1226,7 @@ class ContinuousBatchingEngine:
                 dirty = True
             peak_pages = max(peak_pages, allocator.used_count)
             if dirty:
-                bt_dev = jnp.asarray(host_bt, jnp.int32)
+                bt_dev = self._replicated(jnp.asarray(host_bt, jnp.int32))
                 caches = [dataclasses.replace(
                     c, block_table=jnp.broadcast_to(
                         bt_dev, c.block_table.shape))
@@ -1312,6 +1351,9 @@ class ContinuousBatchingEngine:
                 cache_mod.bytes_per_value(self.cc),
             "cache_total_bytes":
                 paging.modeled_pool_bytes(caches)["total_bytes"],
+            "tp": self.tp,
+            "pool_bytes_per_device":
+                paging.modeled_pool_bytes_per_device(caches)["total_bytes"],
         }
         return results, stats
 
@@ -1378,6 +1420,15 @@ def main(argv=None):
     ap.add_argument("--victim", choices=("last_joined", "fewest_pages"),
                     default="last_joined",
                     help="paged engine: preemption victim selection")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="paged engine: tensor-parallel degree over a "
+                         "(\"data\",\"model\") host mesh (launch.mesh."
+                         "make_tp_mesh). Pools and attention heads shard "
+                         "by GQA head group; greedy tokens are "
+                         "bit-identical to --tp 1. Needs tp | n_kv_heads "
+                         "and tp | device count (on CPU, force devices "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     ap.add_argument("--oversubscribe", type=float, default=0.0,
                     metavar="FRAC",
                     help="paged engine: shrink the pool to FRAC of the "
@@ -1440,6 +1491,10 @@ def main(argv=None):
                                     * pages_per_seq))
         policy = None if args.preempt == "off" else SchedulerPolicy(
             preempt=args.preempt, victim=args.victim)
+        mesh = None
+        if args.tp > 1:
+            from repro.launch.mesh import make_tp_mesh
+            mesh = make_tp_mesh(args.tp)
         engine = ContinuousBatchingEngine(
             model, cache_cfg, ctx, scales,
             page_size=args.page_size, n_pages=n_pages,
@@ -1449,7 +1504,8 @@ def main(argv=None):
             chunk_align=args.chunk_align,
             chunk_seg=args.chunk_seg or None,
             prefix_cache=args.prefix_cache,
-            prefix_min_pages=args.prefix_min_pages)
+            prefix_min_pages=args.prefix_min_pages,
+            mesh=mesh)
         reqs = [Request(np.asarray(batch["tokens"][b]), args.gen)
                 for b in range(args.batch)]
         if not args.no_warmup:
@@ -1460,6 +1516,10 @@ def main(argv=None):
               f"{stats['peak_pages_used']}/{stats['pool_pages']} pages "
               f"({stats['page_size']} slots) peak, "
               f"{stats['cache_total_bytes']/1e6:.2f} MB modeled")
+        if stats["tp"] > 1:
+            print(f"tp={stats['tp']}: "
+                  f"{stats['pool_bytes_per_device']/1e6:.2f} MB "
+                  f"modeled pool per device")
         if args.prefix_cache:
             print(f"prefix-cache: {stats['prefix_hits']} hits / "
                   f"{stats['prefix_misses']} misses "

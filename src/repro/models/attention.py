@@ -179,7 +179,7 @@ def decode_attention(q, cache, *, window: int = 0):
             q, cache.k.data, cache.k.meta, cache.k.scale,
             cache.v.data, cache.v.meta, cache.v.scale,
             kpos, cache.pos - 1, window=window, impl=cache.k.impl,
-            bk=cache.k.bk)
+            bk=cache.k.bk, mesh=cache.k.mesh)
         return out.astype(q.dtype)
     return decode_attention_dequant(q, cache, window=window)
 
@@ -209,16 +209,28 @@ def decode_attention_dequant(q, cache: CacheStore, *, window: int = 0):
 
 def cache_init(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16,
-               cache_cfg: Optional[CacheConfig] = None) -> CacheStore:
+               cache_cfg: Optional[CacheConfig] = None,
+               mesh=None) -> CacheStore:
     cc = cache_cfg or CacheConfig(layout="fp", dtype=dtype)
     shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-    return CacheStore.init(shape, cc)
+    return CacheStore.init(shape, cc, mesh=mesh)
 
 
 def cache_update(cache: CacheStore, k_new, v_new) -> CacheStore:
     """Insert [B, T_new, KV, hd] at cache.pos (T_new static). Sparq-layout
     planes quantize on write (per-site scale frozen at first write)."""
     return cache.update(k_new, v_new)
+
+
+def _cache_mesh(cache):
+    """The tensor-parallel mesh a cache carries, if any (paged stores
+    carry it directly, contiguous stores on their K plane)."""
+    if cache is None:
+        return None
+    mesh = getattr(cache, "mesh", None)
+    if mesh is None and hasattr(cache, "k"):
+        mesh = getattr(cache.k, "mesh", None)
+    return mesh
 
 
 def attention_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
@@ -263,6 +275,18 @@ def attention_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
                                   q_chunk=cfg.attn_chunk,
                                   kv_chunk=cfg.attn_chunk,
                                   prefix_len=prefix_len)
+    mesh = _cache_mesh(new_cache)
+    if mesh is not None:
+        # TP exit point: the attention output leaves the sharded read
+        # head-sharded over the "model" axis. Gather it back to fully
+        # replicated BEFORE the wo matmul — the collective is a pure
+        # all-gather (concatenation, no arithmetic), so the contraction
+        # over H*hd then runs with replicated operands in the same
+        # summation order as TP=1 and tokens stay bit-identical.
+        # Constraining after the matmul instead would let GSPMD sum tp
+        # partial products, reassociating the reduction.
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
     out = dense(params["wo"], _merge_heads(out), "attn_out", ctx)
     return out, new_cache
 

@@ -130,7 +130,7 @@ def ctrl_bytes_per_value(cc: CacheConfig) -> float:
 
 @functools.partial(jax.tree_util.register_dataclass,
                    data_fields=("data", "meta", "scale"),
-                   meta_fields=("layout", "codec", "impl", "bk"))
+                   meta_fields=("layout", "codec", "impl", "bk", "mesh"))
 @dataclasses.dataclass
 class CachedTensor:
     """One cache plane with time axis 1: [B, Tmax, ...rest].
@@ -149,10 +149,14 @@ class CachedTensor:
     codec: Optional[SparqConfig] = None
     impl: str = "auto"
     bk: Optional[int] = None
+    #: optional ("data","model") jax Mesh — decode reads of this plane run
+    #: tensor-parallel over the "model" axis (see kernels.ops.tp_size).
+    mesh: Optional[jax.sharding.Mesh] = None
 
     # -------------------------------------------------------------- init
     @staticmethod
-    def init(shape, cc: CacheConfig) -> "CachedTensor":
+    def init(shape, cc: CacheConfig,
+             mesh: Optional[jax.sharding.Mesh] = None) -> "CachedTensor":
         if cc.layout == "fp":
             return CachedTensor(data=jnp.zeros(shape, cc.dtype), meta=None,
                                 scale=jnp.ones((), jnp.float32))
@@ -162,7 +166,7 @@ class CachedTensor:
                             meta=jnp.zeros(shape, jnp.int8),
                             scale=jnp.zeros((), jnp.float32),
                             layout="sparq", codec=cc.sparq, impl=cc.impl,
-                            bk=cc.attn_bk)
+                            bk=cc.attn_bk, mesh=mesh)
 
     @staticmethod
     def fp(data: jnp.ndarray) -> "CachedTensor":
@@ -260,9 +264,9 @@ class CacheStore(NamedTuple):
     pos: jnp.ndarray        # scalar int32: tokens already in cache
 
     @staticmethod
-    def init(shape, cc: CacheConfig) -> "CacheStore":
-        return CacheStore(k=CachedTensor.init(shape, cc),
-                          v=CachedTensor.init(shape, cc),
+    def init(shape, cc: CacheConfig, mesh=None) -> "CacheStore":
+        return CacheStore(k=CachedTensor.init(shape, cc, mesh=mesh),
+                          v=CachedTensor.init(shape, cc, mesh=mesh),
                           pos=jnp.zeros((), jnp.int32))
 
     @staticmethod

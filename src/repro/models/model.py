@@ -120,12 +120,14 @@ class Model:
 
     # ------------------------------------------------------------ serve
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
-                   cache_cfg=None):
+                   cache_cfg=None, mesh=None):
         """Decode-time cache stack. `cache_cfg` (models.cache.CacheConfig)
         selects the storage layout — fp (in `dtype`) or sparq (§5.1 packed
-        int8 codes + meta, quantized on write / meta-decoded on read)."""
+        int8 codes + meta, quantized on write / meta-decoded on read).
+        `mesh` (a ("data","model") jax Mesh) makes decode reads of the
+        sparq planes run tensor-parallel over the "model" axis."""
         return tr.stack_cache_init(self.cfg, self.kinds, batch, max_len,
-                                   dtype, cache_cfg)
+                                   dtype, cache_cfg, mesh=mesh)
 
     def prefill(self, params, batch: Dict, caches,
                 ctx: Optional[QuantCtx] = None, scales_groups=None):

@@ -423,7 +423,7 @@ class PrefixIndex:
                    data_fields=("k_data", "k_meta", "v_data", "v_meta",
                                 "k_scale", "v_scale", "block_table",
                                 "seq_pos"),
-                   meta_fields=("codec", "impl"))
+                   meta_fields=("codec", "impl", "mesh"))
 @dataclasses.dataclass
 class PagedCacheStore:
     """Paged KV cache for one attention layer (sparq layout only).
@@ -451,11 +451,17 @@ class PagedCacheStore:
     seq_pos: jnp.ndarray
     codec: Optional[SparqConfig] = None
     impl: str = "auto"
+    #: optional ("data","model") jax Mesh. When set, attention reads run
+    #: tensor-parallel via shard_map over the "model" axis (pools shard
+    #: along the KV-head axis; see kernels.ops.tp_size) and the engine
+    #: places the pool planes with a matching NamedSharding.
+    mesh: Optional[jax.sharding.Mesh] = None
 
     # -------------------------------------------------------------- init
     @staticmethod
     def init(n_seqs: int, n_pages: int, page_size: int, n_blocks: int,
-             kv_heads: int, head_dim: int, cc: CacheConfig
+             kv_heads: int, head_dim: int, cc: CacheConfig,
+             mesh: Optional[jax.sharding.Mesh] = None
              ) -> "PagedCacheStore":
         if cc.layout != "sparq":
             raise ValueError(
@@ -474,7 +480,7 @@ class PagedCacheStore:
             v_scale=jnp.zeros((n_seqs,), jnp.float32),
             block_table=jnp.full((n_seqs, n_blocks), -1, jnp.int32),
             seq_pos=jnp.full((n_seqs,), -1, jnp.int32),
-            codec=cc.sparq, impl=cc.impl)
+            codec=cc.sparq, impl=cc.impl, mesh=mesh)
 
     # --------------------------------------------------------- geometry
     @property
@@ -522,6 +528,22 @@ class PagedCacheStore:
             enabled=cfg.enabled)
         return sparq_pack(codes, meta), meta
 
+    def _pin_pools(self, store: "PagedCacheStore") -> "PagedCacheStore":
+        """Re-assert the KV-head NamedSharding on freshly written pool
+        planes. The scatter of a (replicated) token write into a sharded
+        pool is exact per shard, but without the constraint GSPMD may
+        pick a different output sharding — which would both break the
+        jitted step's donation (in/out shardings must match) and force a
+        reshard. No-op without a mesh."""
+        if self.mesh is None:
+            return store
+        from repro.distributed.sharding import pool_plane_sharding
+        sh = pool_plane_sharding(self.mesh, store.k_data.ndim)
+        pin = lambda x: jax.lax.with_sharding_constraint(x, sh)
+        return dataclasses.replace(
+            store, k_data=pin(store.k_data), k_meta=pin(store.k_meta),
+            v_data=pin(store.v_data), v_meta=pin(store.v_meta))
+
     def update(self, k_new: jnp.ndarray, v_new: jnp.ndarray
                ) -> "PagedCacheStore":
         """Write one decode token per sequence slot and advance positions.
@@ -549,7 +571,7 @@ class PagedCacheStore:
         v_scale = self._resolve_scale(self.v_scale, v_new)
         kd, km = self._encode(k_new[:, 0], k_scale)
         vd, vm = self._encode(v_new[:, 0], v_scale)
-        return dataclasses.replace(
+        return self._pin_pools(dataclasses.replace(
             self,
             k_data=self.k_data.at[page, off].set(kd),
             k_meta=self.k_meta.at[page, off].set(km),
@@ -557,7 +579,7 @@ class PagedCacheStore:
             v_meta=self.v_meta.at[page, off].set(vm),
             k_scale=jnp.where(active, k_scale, self.k_scale),
             v_scale=jnp.where(active, v_scale, self.v_scale),
-            seq_pos=jnp.where(active, pos + 1, pos))
+            seq_pos=jnp.where(active, pos + 1, pos)))
 
     def _resolve_chunk_scale(self, stored: jnp.ndarray, x: jnp.ndarray,
                              s_safe: jnp.ndarray,
@@ -614,14 +636,14 @@ class PagedCacheStore:
         page = self.block_table[s_safe, blk]
         page = jnp.where(valid & (page >= 0), page, trash)
         off = eff % ps
-        return dataclasses.replace(
+        return self._pin_pools(dataclasses.replace(
             self,
             k_data=self.k_data.at[page, off].set(kd),
             k_meta=self.k_meta.at[page, off].set(km),
             v_data=self.v_data.at[page, off].set(vd),
             v_meta=self.v_meta.at[page, off].set(vm),
             k_scale=k_scale, v_scale=v_scale,
-            seq_pos=meta.seq_pos_after)
+            seq_pos=meta.seq_pos_after))
 
 
 # ----------------------------------------------------------------------
@@ -641,7 +663,7 @@ def paged_decode_attention(q: jnp.ndarray, store: PagedCacheStore, *,
         q, store.k_data, store.k_meta, store.k_scale,
         store.v_data, store.v_meta, store.v_scale,
         store.block_table, store.seq_pos - 1, window=window,
-        impl=store.impl)
+        impl=store.impl, mesh=store.mesh)
     return out.astype(q.dtype)
 
 
@@ -666,7 +688,8 @@ def chunked_prefill_attention(q: jnp.ndarray, k_chunk: jnp.ndarray,
         store.k_data, store.k_meta, store.k_scale,
         store.v_data, store.v_meta, store.v_scale,
         store.block_table, meta.seq_id, meta.pos, meta.hist,
-        meta.tile_seq, window=window, impl=store.impl, bq=C // nt)
+        meta.tile_seq, window=window, impl=store.impl, bq=C // nt,
+        mesh=store.mesh)
     return out[None].astype(q.dtype)
 
 
@@ -902,3 +925,32 @@ def modeled_pool_bytes(stores) -> dict:
     tally["total_bytes"] = (tally["data_bytes"] + tally["ctrl_bytes"] +
                             tally["other_bytes"])
     return tally
+
+
+def modeled_pool_bytes_per_device(stores) -> dict:
+    """Per-device share of `modeled_pool_bytes` under tensor parallelism.
+
+    The packed pool planes (and their ShiftCtrl side-band) shard along
+    the KV-head axis over the mesh's "model" axis, so each device holds
+    exactly 1/tp of the data+ctrl bytes; bookkeeping (block tables,
+    positions, per-sequence scales) is replicated and charged in full.
+    With no mesh (tp=1) this equals `modeled_pool_bytes`."""
+    from repro.kernels.ops import tp_size
+    meshes = set()
+
+    def visit(st):
+        meshes.add(st.mesh)
+        return st
+
+    jax.tree.map(visit, stores,
+                 is_leaf=lambda n: isinstance(n, PagedCacheStore))
+    assert len(meshes) == 1, f"stores disagree on mesh: {meshes}"
+    tp = tp_size(next(iter(meshes)))
+    tally = modeled_pool_bytes(stores)
+    out = dict(tally)
+    out["tp"] = tp
+    out["data_bytes"] = tally["data_bytes"] / tp
+    out["ctrl_bytes"] = tally["ctrl_bytes"] / tp
+    out["total_bytes"] = (out["data_bytes"] + out["ctrl_bytes"] +
+                          tally["other_bytes"])
+    return out

@@ -152,11 +152,12 @@ def block_init(key, cfg: ModelConfig, kind: str, dtype=jnp.float32) -> Dict:
 
 def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
                      dtype=jnp.bfloat16,
-                     cache_cfg: Optional[CacheConfig] = None):
+                     cache_cfg: Optional[CacheConfig] = None, mesh=None):
     cc = cache_cfg or CacheConfig(layout="fp", dtype=dtype)
     state_dtype = cc.dtype if cc.layout == "fp" else dtype
     if kind in ("dense", "moe", "enc"):
-        return attn_mod.cache_init(cfg, batch, max_len, cache_cfg=cc)
+        return attn_mod.cache_init(cfg, batch, max_len, cache_cfg=cc,
+                                   mesh=mesh)
     if kind in ("mla_dense", "mla_moe"):
         return mla_mod.mla_cache_init(cfg, batch, max_len, cache_cfg=cc)
     if kind == "rwkv":
@@ -389,10 +390,12 @@ def _group_runs(kinds: list[str]) -> list[tuple[str, int]]:
 
 def stack_cache_init(cfg: ModelConfig, kinds: list[str], batch: int,
                      max_len: int, dtype=jnp.bfloat16,
-                     cache_cfg: Optional[CacheConfig] = None) -> list:
+                     cache_cfg: Optional[CacheConfig] = None,
+                     mesh=None) -> list:
     out = []
     for kind, count in _group_runs(kinds):
-        one = block_cache_init(cfg, kind, batch, max_len, dtype, cache_cfg)
+        one = block_cache_init(cfg, kind, batch, max_len, dtype, cache_cfg,
+                               mesh=mesh)
         out.append(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (count,) + x.shape).copy()
             if x.ndim else jnp.broadcast_to(x, (count,)).copy(), one))

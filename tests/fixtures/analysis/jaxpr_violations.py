@@ -75,3 +75,20 @@ def shape_polymorphic(x):
     """JX106 when registered with a two-length shape set: one jit
     signature per length, i.e. the per-shape retrace JX106 forbids."""
     return x * 2
+
+
+def shard_map_hostcall(x):
+    """JX101 again, but buried inside a shard_map body: the auditor must
+    walk through the shard_map eqn's inner jaxpr (the tensor-parallel
+    decode/prefill programs all trace through one), not just pjit cores.
+    A 1-device mesh keeps the fixture traceable on any host."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("model",))
+
+    def body(v):
+        jax.debug.callback(_sink, v)
+        return v + 1
+
+    return shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                     check_rep=False)(x)

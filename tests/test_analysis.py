@@ -48,6 +48,10 @@ def jaxpr_fixture():
 JX_CASES = [
     ("hostcall", [((4,), jnp.float32)], {}, DEFAULT_VMEM_BUDGET,
      JX_HOSTCALL),
+    # same check, different container: proves the auditor descends into
+    # shard_map bodies (the TP serving programs), not only pjit cores
+    ("shard_map_hostcall", [((4,), jnp.float32)], {}, DEFAULT_VMEM_BUDGET,
+     JX_HOSTCALL),
     ("packed_cast", [((8, 16), jnp.int8)], {}, DEFAULT_VMEM_BUDGET,
      JX_PACKED_CAST),
     ("tile_misdivide", [((48, 16), jnp.float32)], {}, DEFAULT_VMEM_BUDGET,

@@ -1,0 +1,224 @@
+"""Tensor-parallel paged serving: the multi-device acceptance harness.
+
+The in-process tests need >= 8 devices, which CPU-only CI gets from
+`XLA_FLAGS=--xla_force_host_platform_device_count=8` (the CI multidevice
+job sets it; so does the subprocess wrapper at the bottom, which lets a
+plain single-device `pytest` run still exercise a bounded TP slice by
+re-spawning itself with the flag).
+
+What is proven here:
+  * greedy tokens are BIT-identical between TP=1 and TP in {2,4,8} for
+    int8 (a8w8) and 4-bit 5opt codecs, with chunked prefill, the prefix
+    cache on, and both preemption policies under a deliberately tight
+    pool — sharding the packed pools by KV head must not change a single
+    sampled token (see docs/sharding.md for why this holds exactly);
+  * per-device pool bytes are global_data_ctrl/TP + replicated
+    bookkeeping, and the planes are physically sharded on the mesh;
+  * the scheduler-trace `InvariantChecker` from test_scheduler replays
+    cleanly against a sharded engine (host-global allocator contract).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparq import SparqConfig
+from repro.models import paging
+from repro.models.cache import CacheConfig
+
+from test_scheduler import InvariantChecker, _make_shared_trace
+
+N_DEV = len(jax.devices())
+needs8 = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+KEY = jax.random.PRNGKey(0)
+PS = 4
+N_PAGES = 8             # tight: the shared trace wants ~30 pages at peak
+MAX_ACTIVE = 3
+MAX_SEQ_LEN = 24
+
+CODECS = {
+    "a8w8": lambda: SparqConfig(enabled=False, signed=True),
+    "5opt": lambda: SparqConfig.opt5(signed=True),
+}
+
+
+def _cc(codec_name: str) -> CacheConfig:
+    return dataclasses.replace(
+        CacheConfig.sparq_cache(CODECS[codec_name](), impl="reference"),
+        attn_bk=PS)
+
+
+@pytest.fixture(scope="module")
+def tp_lm():
+    """Reduced tinyllama widened to 8 KV heads so one model serves every
+    TP degree in {2,4,8} (8 % tp == 0; head groups of G=2 never split)."""
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import Model
+    cfg = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False, n_heads=16, n_kv_heads=8)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    return model, params
+
+
+def _trace(model):
+    """test_scheduler's shared-system-prompt trace: a common 2-page
+    preamble, ragged tails, two exact duplicates, staggered arrivals —
+    the proven recipe for real prefix hits + CoW under a tight pool."""
+    return _make_shared_trace(seed=7, vocab=model.cfg.vocab_size)
+
+
+def _engine(model, codec_name, policy_mode, tp):
+    from repro.launch.mesh import make_tp_mesh
+    from repro.launch.serve import ContinuousBatchingEngine, SchedulerPolicy
+    return ContinuousBatchingEngine(
+        model, _cc(codec_name), page_size=PS, n_pages=N_PAGES,
+        max_active=MAX_ACTIVE, max_seq_len=MAX_SEQ_LEN,
+        policy=SchedulerPolicy(preempt=policy_mode, victim="last_joined"),
+        prefill="chunked", chunk_size=16, chunk_align=4, chunk_seg=2,
+        prefix_cache=True, mesh=make_tp_mesh(tp) if tp > 1 else None)
+
+
+_BASELINE = {}
+
+
+def _baseline(tp_lm, codec_name):
+    """TP=1 greedy tokens for one codec, computed once per module run."""
+    if codec_name not in _BASELINE:
+        model, params = tp_lm
+        eng = _engine(model, codec_name, "requeue", tp=1)
+        results, stats = eng.run(params, _trace(model))
+        assert stats["tp"] == 1
+        _BASELINE[codec_name] = results
+    return _BASELINE[codec_name]
+
+
+# ----------------------------------------------------------------------
+# bit-identical tokens TP=1 vs TP in {2,4,8}, both codecs, both policies
+# ----------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("tp,codec_name,policy_mode", [
+    (2, "a8w8", "requeue"),
+    (2, "5opt", "swap"),
+    (4, "a8w8", "swap"),
+    (4, "5opt", "requeue"),
+    (8, "a8w8", "requeue"),
+    (8, "5opt", "swap"),
+], ids=["tp2-a8w8-requeue", "tp2-5opt-swap", "tp4-a8w8-swap",
+        "tp4-5opt-requeue", "tp8-a8w8-requeue", "tp8-5opt-swap"])
+def test_tp_token_equality(tp_lm, tp, codec_name, policy_mode):
+    model, params = tp_lm
+    eng = _engine(model, codec_name, policy_mode, tp)
+    check = InvariantChecker(ps=PS)     # scheduler-trace replay, sharded
+    results, stats = eng.run(params, _trace(model), trace_hook=check)
+    assert stats["tp"] == tp
+    assert check.steps == stats["decode_steps"] > 0
+    # the run really exercised the contended paths it claims to cover
+    assert stats["preemptions"] > 0, "pool not tight enough"
+    assert stats["prefix_hits"] > 0 and stats["prefix_shared_pages"] > 0
+    if policy_mode == "swap":
+        assert stats["swap_bytes_out"] > 0
+    base = _baseline(tp_lm, codec_name)
+    assert set(results) == set(base)
+    for rid in base:
+        np.testing.assert_array_equal(results[rid], base[rid])
+
+
+# ----------------------------------------------------------------------
+# per-device pool accounting + physical plane sharding
+# ----------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("tp", [1, 2, 4, 8])
+def test_per_device_pool_accounting(tp_lm, tp):
+    model, _ = tp_lm
+    eng = _engine(model, "5opt", "requeue", tp)
+    stores = jax.eval_shape(eng._init_stores)
+    glob = paging.modeled_pool_bytes(stores)
+    per = paging.modeled_pool_bytes_per_device(stores)
+    assert per["tp"] == tp
+    # packed data + ShiftCtrl side-band shard 1/tp; bookkeeping is global
+    assert per["data_bytes"] == glob["data_bytes"] / tp
+    assert per["ctrl_bytes"] == glob["ctrl_bytes"] / tp
+    assert per["other_bytes"] == glob["other_bytes"]
+    assert per["total_bytes"] == pytest.approx(
+        (glob["data_bytes"] + glob["ctrl_bytes"]) / tp + glob["other_bytes"])
+    if tp == 1:
+        assert per["total_bytes"] == glob["total_bytes"]
+
+
+@needs8
+def test_pool_planes_physically_sharded(tp_lm):
+    model, _ = tp_lm
+    eng = _engine(model, "5opt", "requeue", tp=4)
+    stores = eng._init_stores()
+    first = jax.tree.leaves(
+        jax.tree.map(lambda s: s, stores,
+                     is_leaf=lambda n: isinstance(n, paging.PagedCacheStore)),
+        is_leaf=lambda n: isinstance(n, paging.PagedCacheStore))[0]
+    for name in ("k_data", "k_meta", "v_data", "v_meta"):
+        plane = getattr(first, name)
+        shard = plane.sharding.shard_shape(plane.shape)
+        kv_ax = plane.ndim - 2
+        assert shard[kv_ax] == plane.shape[kv_ax] // 4, name
+        assert all(shard[i] == plane.shape[i]
+                   for i in range(plane.ndim) if i != kv_ax), name
+    # bookkeeping stays replicated on every device
+    for name in ("k_scale", "v_scale", "block_table", "seq_pos"):
+        arr = getattr(first, name)
+        assert arr.sharding.shard_shape(arr.shape) == arr.shape, name
+
+
+@needs8
+def test_kv_head_divisibility_guard(tp_lm):
+    """TP that would split a head group is rejected up front."""
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import Model
+    model = Model(get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False))          # n_kv_heads=2
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        _engine(model, "5opt", "requeue", tp=8)
+
+
+# ----------------------------------------------------------------------
+# self-provisioning wrapper: one bounded TP slice under plain tier-1
+# ----------------------------------------------------------------------
+
+@pytest.mark.skipif(
+    N_DEV >= 8, reason="in-process TP tests already ran on this mesh")
+@pytest.mark.skipif(
+    os.environ.get("REPRO_TP_SUBPROCESS") == "1",
+    reason="already inside the forced-device subprocess")
+def test_tp_slice_in_forced_device_subprocess():
+    """Single-device runs still get TP coverage: re-spawn pytest on this
+    file with the forced 8-device CPU flag and a bounded `-k` slice (one
+    token-equality cell + the accounting grid + the guard). The full
+    matrix runs in CI's multidevice job."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["REPRO_TP_SUBPROCESS"] = "1"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", os.path.abspath(__file__), "-q",
+         "-p", "no:cacheprovider",
+         "-k", ("tp2-a8w8-requeue or per_device_pool_accounting "
+                "or divisibility_guard")],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, \
+        f"TP subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+    # the -k slice selects 6 tests; none may be skipped for device count
+    assert "6 passed" in proc.stdout, proc.stdout
