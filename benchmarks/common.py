@@ -138,11 +138,11 @@ def quant_ctx(scales: Dict[str, float], cfg: SparqConfig,
 
 def timed(fn, *args, reps=3):
     fn(*args)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6  # us
+    return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
 def emit(table: str, rows):

@@ -9,10 +9,12 @@ engine tok/s + pool utilization under a ragged continuous-batching
 workload), and oversubscribed_serving writes BENCH_preempt.json (tok/s +
 preemption counts + swap traffic as the pool shrinks below the working
 set, under both preemption policies), prefill_saturation writes
-BENCH_prefill.json (sequential vs chunked admission throughput), and
+BENCH_prefill.json (sequential vs chunked admission throughput),
 shared_prefix writes BENCH_prefix.json (prefix-cache off vs on under a
-75%-shared-prefix workload) so the serving-perf trajectory accumulates
-across PRs. Every blob also carries a `compile_cache` section — the
+75%-shared-prefix workload), and latency_slo writes BENCH_slo.json
+(p50/p99 TTFT + inter-token latency vs offered load through the async
+streaming front-end, preemption-policy x arrival-process grid) so the
+serving-perf trajectory accumulates across PRs. Every blob also carries a `compile_cache` section — the
 jaxpr auditor's programs-traced / jaxprs-per-program tallies
 (docs/analysis.md) — so a per-shape retrace regression is visible next
 to the throughput numbers it would poison.
@@ -299,9 +301,9 @@ def prefill_saturation_rows(out_json: str = "BENCH_prefill.json",
         if prefill == "chunked":
             kw.update(prefill="chunked", chunk_size=64, chunk_align=8)
         eng = serve_mod.ContinuousBatchingEngine(model, cc, **kw)
-        t0 = time.time()
+        t0 = time.perf_counter()
         results, stats = eng.run(params, reqs)       # cold: compiles
-        cold_s = time.time() - t0
+        cold_s = time.perf_counter() - t0
         _, stats2 = eng.run(params, reqs)            # steady: warm
         compiles = (stats["prefill_compile_count"]
                     if prefill == "chunked"
@@ -407,9 +409,9 @@ def shared_prefix_rows(out_json: str = "BENCH_prefix.json",
             model, cc, page_size=ps, n_pages=26, max_active=S,
             max_seq_len=80, prefill="chunked", chunk_size=64,
             chunk_align=8, chunk_seg=8, prefix_cache=prefix)
-        t0 = time.time()
+        t0 = time.perf_counter()
         results, stats = eng.run(params, reqs)       # cold: compiles
-        cold_s = time.time() - t0
+        cold_s = time.perf_counter() - t0
         _, stats2 = eng.run(params, reqs)            # steady: warm
         blob = {
             "cold_run_s": round(cold_s, 3),
@@ -566,13 +568,132 @@ def sharded_serving_rows(out_json: str = "BENCH_tp.json",
     return rows
 
 
+def latency_slo_rows(out_json: str = "BENCH_slo.json",
+                     impls: tuple = ("reference",)) -> list:
+    """Latency-SLO harness over the async front-end -> BENCH_slo.json.
+
+    The ragged workload is replayed as an open-loop timed arrival trace
+    through `launch.frontend.play_trace`: requests arrive at wall-clock
+    offsets (Poisson and bursty processes at the same offered load), the
+    engine streams tokens per decode step, and each cell reports
+    p50/p99 TTFT (first token minus *scheduled* arrival — queueing
+    delay charged to the server) and pooled inter-token latency.
+
+    The grid stresses the two scheduling knobs the engine exposes:
+
+      * preemption policy x arrival process: {requeue, swap, auto} on a
+        pool at ~0.45x the working set, under both traces — the cost
+        model behind `--preempt auto` must hold up in tail latency, not
+        just in replay-step/swap-byte counts (BENCH_preempt.json);
+      * prefill admission: sequential vs chunked under Poisson arrivals
+        (head-of-line blocking shows up directly in ITL p99), and the
+        chunks-per-iteration `--prefill-priority` knob swept under
+        bursty arrivals (throttling prefill trades TTFT for ITL).
+
+    Every cell's warmup traffic runs through the same live engine loop
+    and is erased at the measure boundary by `engine.reset_stats()`
+    (play_trace does this), and every cell's streamed tokens are
+    asserted bit-identical to a synchronous `engine.run` oracle —
+    scheduling moves latency, never tokens.
+    """
+    import numpy as np
+
+    from repro.core.sparq import SparqConfig
+    from repro.launch import frontend
+    from repro.launch import serve as serve_mod
+    from repro.models.cache import CacheConfig
+
+    model, params, reqs, lens, gens, ps, S, full_pool = _ragged_workload()
+    impl = impls[0]
+    cc = CacheConfig.sparq_cache(SparqConfig.opt5(signed=True), impl=impl)
+    n_pages = 10                        # ~0.45x working set: preempts
+    n = len(reqs)
+    rate = 24.0                         # req/s offered load
+    rng = np.random.default_rng(7)
+    traces = {k: frontend.arrival_times(k, n, rate, rng=rng)
+              for k in ("poisson", "bursty")}
+
+    def engine(preempt="requeue", prefill="chunked", priority=1.0):
+        policy = serve_mod.SchedulerPolicy(preempt=preempt,
+                                           victim="last_joined")
+        kw = {}
+        if prefill == "chunked":
+            kw = dict(chunk_size=32, chunk_align=8,
+                      prefill_priority=priority)
+        return serve_mod.ContinuousBatchingEngine(
+            model, cc, page_size=ps, n_pages=n_pages, max_active=S,
+            max_seq_len=80, policy=policy, prefill=prefill, **kw)
+
+    warm = [(r.tokens, r.gen) for r in reqs]
+
+    def cell(eng, trace_kind, *, warmup=warm, oracle=None):
+        trace = [(r.tokens, r.gen, at)
+                 for r, at in zip(reqs, traces[trace_kind])]
+        out, slo, stats = frontend.play_trace(eng, params, trace,
+                                              warmup=warmup)
+        if oracle is not None:          # exactness is a given
+            for i in range(n):
+                np.testing.assert_array_equal(out[i], oracle[i])
+        span = max(traces[trace_kind]) or 1.0
+        return {
+            "trace": trace_kind, "policy": eng.policy.preempt,
+            "prefill": eng.prefill_mode,
+            "prefill_priority": eng.prefill_priority,
+            "offered_load_req_s": round(n / span, 2),
+            "ttft_p50_ms": round(slo["ttft"]["p50_ms"], 2),
+            "ttft_p99_ms": round(slo["ttft"]["p99_ms"], 2),
+            "itl_p50_ms": round(slo["itl"]["p50_ms"], 3),
+            "itl_p99_ms": round(slo["itl"]["p99_ms"], 3),
+            "decode_tok_s": round(stats["decode_tok_s"], 2),
+            "preemptions": stats["preemptions"],
+            "resumes": stats["resumes"],
+            "swap_bytes_out": stats["swap_bytes_out"],
+        }
+
+    # one synchronous oracle: greedy tokens are arrival/policy-invariant
+    base = engine()
+    oracle, _ = base.run(params, reqs)  # also compiles base's programs
+
+    blob = {"impl": impl, "requests": n, "page_size": ps,
+            "active_slots": S, "pool_pages": n_pages,
+            "offered_rate_req_s": rate,
+            "arrival_offsets_s": {k: [round(t, 4) for t in v]
+                                  for k, v in traces.items()},
+            "cells": {}}
+    rows = []
+
+    # policy x arrival-process grid (chunked prefill, priority 1.0)
+    engines = {"requeue": base, "swap": engine("swap"),
+               "auto": engine("auto")}
+    for mode, eng in engines.items():
+        for kind in ("poisson", "bursty"):
+            tag = f"{kind}_{mode}"
+            blob["cells"][tag] = cell(eng, kind, oracle=oracle)
+    # admission comparison: sequential prefill under Poisson arrivals
+    blob["cells"]["poisson_requeue_sequential"] = cell(
+        engine(prefill="sequential"), "poisson", oracle=oracle)
+    # prefill-priority sweep under bursty arrivals (1.0 is in the grid)
+    for pr in (0.25, 4.0):
+        blob["cells"][f"bursty_requeue_prio{pr}"] = cell(
+            engine(priority=pr), "bursty", oracle=oracle)
+
+    for tag, c in blob["cells"].items():
+        cfg_name = f"tinyllama_reduced_slo_{tag}"
+        rows += [(cfg_name, m, c[m])
+                 for m in ("offered_load_req_s", "ttft_p50_ms",
+                           "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms",
+                           "preemptions")]
+    _dump(out_json, blob)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
                     default="1,2,3,4,5,6,stats,serve,decode_cache,"
                             "paged_serving,oversubscribed_serving,"
                             "prefill_saturation,shared_prefix,"
-                            "sharded_serving")
+                            "sharded_serving,latency_slo")
     ap.add_argument("--decode-impls", default="reference,pallas",
                     help="fused-decode impls to sweep in decode_cache "
                          "(pallas runs in interpret mode off-TPU: exact "
@@ -582,7 +703,7 @@ def main() -> None:
 
     from benchmarks import common, tables
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     print("table,config,metric,value")
     model = common.train_cnn()
     scales = common.calibrate_cnn(model)
@@ -641,7 +762,12 @@ def main() -> None:
         # tensor-parallel sweep: tok/s + per-device pool bytes vs tp
         common.emit("sharded_serving", sharded_serving_rows(
             impls=tuple(args.decode_impls.split(","))))
-    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    if "latency_slo" in want:
+        # async streaming front-end: TTFT/ITL percentiles vs offered
+        # load, policy x arrival-process grid -> BENCH_slo.json
+        common.emit("latency_slo", latency_slo_rows(
+            impls=tuple(args.decode_impls.split(","))))
+    print(f"# total {time.perf_counter()-t0:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -79,6 +79,7 @@ from repro.analysis.findings import (Finding, HL_LOOP_NUMERIC, HL_LOOP_SYNC,
 DEFAULT_TARGETS = (
     "src/repro/launch/serve.py",
     "src/repro/launch/prefill.py",
+    "src/repro/launch/frontend.py",
     "src/repro/models/paging.py",
 )
 

@@ -25,11 +25,11 @@ class HeartbeatMonitor:
     last_step: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def beat(self, worker: int, step: int, now: Optional[float] = None):
-        self.last_seen[worker] = time.time() if now is None else now
+        self.last_seen[worker] = time.monotonic() if now is None else now
         self.last_step[worker] = step
 
     def dead_workers(self, now: Optional[float] = None) -> List[int]:
-        now = time.time() if now is None else now
+        now = time.monotonic() if now is None else now
         return [w for w, t in self.last_seen.items()
                 if now - t > self.timeout_s]
 

@@ -255,14 +255,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec.update(status="skipped", reason=reason)
         return rec
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         with mesh:
             fn, args, cfg = build_cell(arch, shape_name, mesh, sp=sp)
             lowered = fn.lower(*args)
-            t1 = time.time()
+            t1 = time.perf_counter()
             compiled = lowered.compile()
-            t2 = time.time()
+            t2 = time.perf_counter()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
             coll = collective_bytes(compiled.as_text())

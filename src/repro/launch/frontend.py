@@ -1,0 +1,337 @@
+"""Asyncio streaming front-end over the paged continuous-batching engine.
+
+`ContinuousBatchingEngine.run` is a synchronous host loop: one thread,
+one jitted decode step per iteration, mailboxes (`submit`/`cancel`)
+drained once per iteration. This module puts an asyncio face on it
+without touching that discipline:
+
+  * the engine loop runs on a daemon thread in serve-forever mode
+    (`clock_mode="wall"`, `drain=False`);
+  * `AsyncFrontend.submit()` hands a request to the engine's thread-safe
+    mailbox and returns a `RequestStream` — an async iterator of
+    `TokenEvent`s fed from the engine's per-step batched `jax.device_get`
+    (ONE device fetch per decode step for all slots, fanned out to
+    per-request asyncio queues via `call_soon_threadsafe`; no per-token
+    device sync, so the engine's HL201/HL202 host discipline is intact);
+  * `RequestStream.cancel()` maps onto the engine's eviction/`release`
+    path: queued requests are dropped, mid-prefill requests drop their
+    PrefillScheduler job and granted pages, active/preempted requests
+    are evicted with shared prefix pages refcount-released and swapped
+    planes discarded without a swap-in charge;
+  * `stop()` shuts the loop down and returns the engine's results/stats.
+
+The greedy tokens streamed here are bit-identical to a synchronous
+`engine.run` over the same requests — scheduling, arrival times,
+preemption, and the prefix cache never change tokens (the engine's
+core exactness contract; tests/test_frontend.py asserts it end-to-end).
+
+`play_trace` is the synchronous harness: replay a timed arrival trace
+(list of `(tokens, gen, at_seconds)`) through the front-end and report
+latency SLOs — per-request TTFT (first token time minus *scheduled*
+arrival, so queueing delay is charged) and inter-token latency, with
+p50/p99 summaries. benchmarks/run.py builds BENCH_slo.json from it.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.launch.serve import ContinuousBatchingEngine, Request
+
+# host/device topology for the static analyzer (repro.analysis.host_lint).
+# This module is pure host code — it never imports jax; every device
+# value it sees already crossed through the engine's batched device_get.
+__analysis__ = {
+    "traced": (),
+    "host_loop": (),
+    "device_returning": (),
+    "device_params": (),
+    "host_objects": ("engine", "_engine"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One streamed greedy token: value, perf_counter stamp of the step
+    that produced it, and whether it completes its request."""
+    token: int
+    t: float
+    final: bool
+
+
+class RequestStream:
+    """Per-request handle: an async iterator of `TokenEvent`s.
+
+    `arrive_t` is the scheduled engine-clock arrival (seconds since run
+    start) or None for "submitted now"; `submit_t` is the perf_counter
+    stamp of the submit call. TTFT is measured against the scheduled
+    arrival when there is one — a request that waited in the queue is
+    charged its queueing delay.
+    """
+
+    def __init__(self, frontend: "AsyncFrontend", rid: int,
+                 submit_t: float, arrive_t: Optional[float]):
+        self._frontend = frontend
+        self.rid = rid
+        self.submit_t = submit_t
+        self.arrive_t = arrive_t
+        self.cancelled = False
+        self.done = False
+        self.events: List[TokenEvent] = []
+        self._q: asyncio.Queue = asyncio.Queue()
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> TokenEvent:
+        if self.done and self._q.empty():
+            raise StopAsyncIteration
+        item = await self._q.get()
+        if item is None:
+            self.done = True
+            raise StopAsyncIteration
+        if isinstance(item, BaseException):
+            self.done = True
+            raise item
+        return item
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Tokens streamed so far (all of them, once drained)."""
+        return np.asarray([e.token for e in self.events], np.int32)
+
+    async def drain(self) -> np.ndarray:
+        """Consume the stream to completion; returns the token array."""
+        async for _ in self:
+            pass
+        return self.tokens
+
+    def cancel(self) -> None:
+        """Cancel this request (idempotent, best-effort — see
+        ContinuousBatchingEngine.cancel). Closes the stream immediately;
+        tokens already streamed stay in `events`."""
+        if self.cancelled or self.done:
+            return
+        self.cancelled = True
+        self._frontend._engine.cancel(self.rid)
+        self._q.put_nowait(None)            # close the iterator
+
+
+class AsyncFrontend:
+    """Drives one serve-forever engine loop from asyncio.
+
+    Lifecycle::
+
+        fe = AsyncFrontend(engine, params)
+        await fe.start()                  # engine loop on a daemon thread
+        h = fe.submit(tokens, gen)        # or at=<seconds since start>
+        async for ev in h: ...            # stream TokenEvents
+        results, stats = await fe.stop()  # drain mailboxes, join thread
+
+    One frontend per engine at a time (the engine owns one live run).
+    """
+
+    def __init__(self, engine: ContinuousBatchingEngine, params, *,
+                 trace_hook=None):
+        self._engine = engine
+        self._params = params
+        self._trace_hook = trace_hook
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._streams: Dict[int, RequestStream] = {}
+        self._error: Optional[BaseException] = None
+        self.results: Optional[Dict[int, np.ndarray]] = None
+        self.stats: Optional[dict] = None
+
+    # ------------------------------------------------------- lifecycle
+    async def start(self) -> None:
+        """Start the engine loop and wait until it accepts traffic."""
+        if self._thread is not None:
+            raise RuntimeError("frontend already started")
+        self._loop = asyncio.get_running_loop()
+        self._thread = threading.Thread(
+            target=self._serve, name="engine-loop", daemon=True)
+        self._thread.start()
+        ok = await self._loop.run_in_executor(
+            None, self._engine._run_live.wait, 30.0)
+        if not ok:
+            raise RuntimeError("engine loop failed to come up") \
+                from self._error
+
+    def _serve(self) -> None:
+        """Engine thread body: the serve-forever run loop."""
+        try:
+            self.results, self.stats = self._engine.run(
+                self._params, [], trace_hook=self._trace_hook,
+                emit=self._emit, clock_mode="wall", drain=False)
+        except BaseException as e:          # propagate into the streams
+            self._error = e
+            if self._loop is not None:
+                self._loop.call_soon_threadsafe(self._fail, e)
+
+    def _emit(self, rid: int, token: int, final: bool, t: float) -> None:
+        # engine thread -> event loop; tokens are already host ints
+        self._loop.call_soon_threadsafe(
+            self._dispatch, rid, token, final, t)
+
+    def _dispatch(self, rid: int, token: int, final: bool,
+                  t: float) -> None:
+        h = self._streams.get(rid)
+        if h is None or h.cancelled or h.done:
+            return                          # late token of a cancelled rid
+        ev = TokenEvent(token=token, t=t, final=final)
+        h.events.append(ev)
+        h._q.put_nowait(ev)
+        if final:
+            h._q.put_nowait(None)           # close the iterator
+
+    def _fail(self, e: BaseException) -> None:
+        for h in self._streams.values():
+            if not h.done:
+                h._q.put_nowait(e)
+
+    @property
+    def t_origin(self) -> float:
+        """perf_counter stamp of the engine clock's zero (run start)."""
+        return self._engine._t_origin
+
+    # --------------------------------------------------------- traffic
+    def submit(self, tokens, gen: int,
+               at: Optional[float] = None) -> RequestStream:
+        """Submit a request; returns its stream handle. `at` schedules
+        the arrival on the engine clock (seconds since run start) —
+        None means "arrives now". Must be called on the event loop."""
+        if self._error is not None:
+            raise RuntimeError("engine loop died") from self._error
+        t_sub = time.perf_counter()
+        rid = self._engine.submit(Request(np.asarray(tokens), gen), at=at)
+        h = RequestStream(self, rid, submit_t=t_sub, arrive_t=at)
+        self._streams[rid] = h
+        return h
+
+    async def stop(self) -> Tuple[Dict[int, np.ndarray], dict]:
+        """Stop the engine loop and return its (results, stats). Streams
+        still open (cancelled or in flight at stop) are closed; their
+        partial tokens remain on the handles."""
+        self._engine.request_stop()
+        await self._loop.run_in_executor(None, self._thread.join)
+        if self._error is not None:
+            raise self._error
+        for h in self._streams.values():
+            if not h.done:
+                h._q.put_nowait(None)
+        return self.results, self.stats
+
+
+# ----------------------------------------------------------------------
+# arrival traces + latency-SLO accounting
+# ----------------------------------------------------------------------
+
+def arrival_times(kind: str, n: int, rate: float, *,
+                  burst: int = 4, rng=None) -> List[float]:
+    """Arrival offsets (seconds since run start) for an open-loop trace.
+
+    `poisson`: i.i.d. exponential inter-arrival gaps at `rate` req/s —
+    the memoryless baseline every queueing model assumes. `bursty`:
+    groups of `burst` requests land simultaneously, bursts spaced so the
+    long-run offered load is still `rate` req/s — same average load,
+    far worse tail (admission queueing concentrates at each burst).
+    """
+    if rate <= 0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    rng = np.random.default_rng(0) if rng is None else rng
+    if kind == "poisson":
+        return list(np.cumsum(rng.exponential(1.0 / rate, n)))
+    if kind == "bursty":
+        gap = burst / rate
+        return [(i // burst) * gap for i in range(n)]
+    raise ValueError(f"unknown arrival trace kind: {kind!r}")
+
+
+def _pctl(xs: Sequence[float]) -> dict:
+    """p50/p99/mean/max of a sample, in milliseconds."""
+    if not xs:
+        return {"p50_ms": None, "p99_ms": None,
+                "mean_ms": None, "max_ms": None, "n": 0}
+    a = np.asarray(xs, np.float64) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean()), "max_ms": float(a.max()),
+            "n": int(a.size)}
+
+
+def slo_summary(streams: Sequence[RequestStream],
+                t_origin: float) -> dict:
+    """TTFT and inter-token latency percentiles over finished streams.
+
+    TTFT is first-token stamp minus the request's *scheduled* arrival
+    (t_origin + arrive_t), so queueing/admission delay is charged to the
+    server; for unscheduled submissions the submit stamp is used. ITL
+    pools every consecutive-token gap across all streams (per-request
+    means hide tail stalls — a preemption is one giant gap, and the
+    pooled p99 is exactly where it shows)."""
+    ttft: List[float] = []
+    itl: List[float] = []
+    for h in streams:
+        if not h.events:
+            continue
+        ref = t_origin + h.arrive_t if h.arrive_t is not None \
+            else h.submit_t
+        ttft.append(h.events[0].t - ref)
+        itl.extend(b.t - a.t for a, b in zip(h.events, h.events[1:]))
+    return {"requests": len(streams),
+            "ttft": _pctl(ttft), "itl": _pctl(itl)}
+
+
+def play_trace(engine: ContinuousBatchingEngine, params,
+               trace: Sequence[Tuple[np.ndarray, int, float]], *,
+               warmup: Optional[Sequence] = None,
+               trace_hook=None) -> Tuple[Dict[int, np.ndarray],
+                                         dict, dict]:
+    """Replay a timed arrival trace through the async front-end.
+
+    `trace` rows are (prompt_tokens, gen, at_seconds). Every request is
+    submitted up front with its scheduled arrival; the engine's wall
+    clock admits each one when its time comes, so the replay is an
+    open-loop load test (arrivals do not wait for completions).
+
+    `warmup` rows (same shape, `at` ignored) run to completion first and
+    are then erased from the books via `engine.reset_stats()` — compiled
+    programs and a warm PrefixIndex stay, counters/timings/watermarks
+    restart — so the reported stats and SLOs reflect only the trace.
+
+    Returns ({trace_row_index: streamed int32 tokens}, slo_summary,
+    engine stats) — keyed by trace position, so callers can compare
+    against a synchronous `engine.run` over the same rows directly.
+    """
+    async def _main():
+        fe = AsyncFrontend(engine, params, trace_hook=trace_hook)
+        await fe.start()
+        if warmup:
+            wh = [fe.submit(toks, gen) for toks, gen, *_ in warmup]
+            for h in wh:
+                await h.drain()
+            # let the engine quiesce (final evictions run one iteration
+            # after the final token) before drawing the measure boundary
+            await asyncio.sleep(0.05)
+            engine.reset_stats()
+        # the engine clock kept ticking through warmup: schedule the
+        # trace relative to "now" so at=0 still means "measure from an
+        # unloaded server", and TTFT references follow automatically
+        base = time.perf_counter() - fe.t_origin
+        handles = [fe.submit(toks, gen, at=base + float(at))
+                   for toks, gen, at in trace]
+        for h in handles:
+            await h.drain()
+        results, stats = await fe.stop()
+        return fe, handles, results, stats
+
+    fe, handles, results, stats = asyncio.run(_main())
+    slo = slo_summary(handles, fe.t_origin)
+    out = {i: h.tokens for i, h in enumerate(handles)}
+    return out, slo, stats

@@ -186,6 +186,12 @@ class PrefillScheduler:
         return bool(self.jobs)
 
     @property
+    def pending_tokens(self) -> int:
+        """Prompt tokens still to stream across every queued job — the
+        prefill backlog depth (SLO snapshots and admission telemetry)."""
+        return sum(j.remaining for j in self.jobs)
+
+    @property
     def compile_count(self) -> int:
         """Number of traced chunk programs (the retrace regression guard)."""
         return self._chunk._cache_size()

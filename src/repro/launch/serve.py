@@ -20,7 +20,11 @@ Two engines share the model and the fused packed-cache decode kernels:
       `SchedulerPolicy` (`--preempt requeue|swap`) the pool may be
       oversubscribed: decode-time exhaustion preempts victim sequences
       (requeue-and-replay, or packed-page swap to a host `SwapStore`) and
-      resumes them bit-exactly ahead of new admissions.
+      resumes them bit-exactly ahead of new admissions. The loop also
+      accepts live traffic: `submit()`/`cancel()` mailboxes drained once
+      per iteration, per-token `emit` streaming, and a wall-clock mode
+      (`clock_mode="wall"`, `drain=False`) that `launch.frontend`'s
+      asyncio front-end drives for latency-SLO serving.
 
 `--kv-cache {fp32,bf16,sparq}` selects the cache layout (the paged engine
 requires sparq — packed pages are its point); `--impl` picks the kernel
@@ -39,7 +43,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import heapq
 import math
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -72,7 +78,8 @@ __analysis__ = {
         "paging.copy_page",
         "paging.adopt_prefix_scales",
     ),
-    "host_loop": ("ContinuousBatchingEngine.run",),
+    "host_loop": ("ContinuousBatchingEngine.run",
+                  "ContinuousBatchingEngine._run_impl"),
     # both spellings: the loop aliases `sched = self._sched` up front
     "device_returning": ("sched.run", "_sched.run"),
     "device_params": (),
@@ -178,7 +185,7 @@ class DecodeEngine:
 
         compile_s = 0.0
         if warmup:
-            t0 = time.time()
+            t0 = time.perf_counter()
             tok_w, caches_w = self._prefill(params, batch, caches)
             if gen > 1:
                 rest_w, _ = self._decode(params, tok_w, caches_w, pos0,
@@ -186,14 +193,14 @@ class DecodeEngine:
                 jax.block_until_ready(rest_w)
             else:
                 jax.block_until_ready(tok_w)
-            compile_s = time.time() - t0
+            compile_s = time.perf_counter() - t0
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         tok0, caches = self._prefill(params, batch, caches)
         jax.block_until_ready(tok0)
-        t_prefill = time.time() - t0
+        t_prefill = time.perf_counter() - t0
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         if gen > 1:
             rest, caches = self._decode(params, tok0, caches, pos0,
                                         steps=gen - 1)
@@ -201,7 +208,7 @@ class DecodeEngine:
             toks = jnp.concatenate([tok0, rest], axis=1)
         else:
             toks = tok0
-        t_decode = time.time() - t0
+        t_decode = time.perf_counter() - t0
 
         tally = cache_mod.modeled_cache_bytes(caches)
         stats = {
@@ -238,12 +245,15 @@ class Request:
 
     `gen` counts like DecodeEngine's: total greedy tokens to return,
     including the one the prefill emits. `arrive_at` delays admission
-    until that many decode steps have executed (0 = available at start) —
-    arrival traces for the scheduler test harness and open-loop
-    benchmarks; it changes *when* a request is served, never its tokens."""
+    until the engine clock reaches it (0 = available at start): under
+    the default `clock_mode="step"` the clock counts decode steps (plus
+    idle fast-forwards); under `clock_mode="wall"` it is monotonic
+    seconds since the run started (`time.perf_counter` based), so an
+    arrival trace replays at real wall times. Either way it changes
+    *when* a request is served, never its tokens."""
     tokens: np.ndarray          # [L] int prompt token ids
     gen: int
-    arrive_at: int = 0          # decode-step index at which it arrives
+    arrive_at: float = 0.0      # engine-clock time at which it arrives
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens)
@@ -383,7 +393,7 @@ class ContinuousBatchingEngine:
                  prefill: str = "sequential", chunk_size: int = 32,
                  chunk_align: int = 8, chunk_seg: Optional[int] = None,
                  prefix_cache: bool = False, prefix_min_pages: int = 1,
-                 mesh=None):
+                 prefill_priority: float = 1.0, mesh=None):
         if cache_cfg.layout != "sparq":
             raise ValueError("the paged engine stores packed §5.1 pages; "
                              "use --kv-cache sparq")
@@ -398,6 +408,13 @@ class ContinuousBatchingEngine:
                              f"of page_size {page_size}")
         if prefill not in ("sequential", "chunked"):
             raise ValueError(f"unknown prefill mode {prefill!r}")
+        if prefill_priority <= 0:
+            raise ValueError("--prefill-priority must be > 0: it is the "
+                             "mean prefill chunks run per scheduler "
+                             "iteration (1.0 = one chunk per decode step)")
+        if prefill_priority != 1.0 and prefill != "chunked":
+            raise ValueError("--prefill-priority only meters the chunked "
+                             "prefill stream; add --prefill chunked")
         if prefix_cache and prefill != "chunked":
             raise ValueError(
                 "--prefix-cache requires --prefill chunked: only the "
@@ -465,6 +482,21 @@ class ContinuousBatchingEngine:
         # that produced the original tokens (one page == one Tk tile)
         self._cc_replay = dataclasses.replace(cache_cfg, attn_bk=page_size)
         self._debug_state: dict = {}     # last run's allocator/slots (tests)
+        self.prefill_priority = float(prefill_priority)
+        # live-traffic mailboxes: submit()/cancel() may be called from any
+        # thread while run() is looping; the loop drains both under the
+        # lock exactly once per iteration, so everything inside the loop
+        # stays single-threaded. `_wake` shortens idle sleeps when traffic
+        # lands; `_run_live` gates submissions to a running loop.
+        self._mbox_lock = threading.Lock()
+        self._inbox: List[Tuple[int, Request, Optional[float]]] = []
+        self._cancel_box: set = set()
+        self._wake = threading.Event()
+        self._run_live = threading.Event()
+        self._stop_flag = False
+        self._next_rid = 0
+        self._t_origin: Optional[float] = None   # wall t0 of the live run
+        self._live: Optional[dict] = None        # reset_stats() target
         self._prefill = jax.jit(self._prefill_fn)
         self._replay = jax.jit(self._replay_fn)
         # donate the cache buffers: the pools are the dominant state and
@@ -573,7 +605,7 @@ class ContinuousBatchingEngine:
                           "joined": st.joined}
                       for s, st in enumerate(slots) if st is not None},
             "host_bt": host_bt.copy(),
-            "queued": [rid for rid, _ in queue],
+            "queued": [rid for _, rid, _ in sorted(queue)],
             "resume_rids": [rec.rid for rec in resume_q],
             "swapped_rids": sorted(
                 rec.rid for rec in resume_q if rec.swapped),
@@ -585,9 +617,88 @@ class ContinuousBatchingEngine:
             "caches": caches,
         }
 
+    # ------------------------------------------------------ live traffic
+    def _validate_request(self, req: Request, label="request") -> None:
+        need = len(req.tokens) + req.gen - 1
+        ps = self.page_size
+        if need > self.n_blocks * ps or math.ceil(need / ps) > self.n_pages:
+            raise ValueError(
+                f"{label} needs {need} slots "
+                f"({math.ceil(need / ps)} pages) but the engine serves "
+                f"at most {self.n_blocks * ps} slots/sequence from "
+                f"{self.n_pages} pages — raise max_seq_len/n_pages")
+
+    def submit(self, req, at: Optional[float] = None) -> int:
+        """Hand a new request to a *running* `run()` loop; thread-safe.
+
+        Returns the request id the results/stream will use. `at` is the
+        engine-clock arrival time (see Request.arrive_at); None stamps
+        the request with the clock value at mailbox drain — i.e. "it
+        arrived now". The request's own `arrive_at` field is ignored on
+        this path (`at` is authoritative). Raises RuntimeError when no
+        run loop is live to serve it."""
+        # duck-typed: `python -m repro.launch.serve` loads this module as
+        # __main__, so an isinstance against Request would reject Request
+        # objects built by importers of repro.launch.serve
+        req = req if hasattr(req, "tokens") else Request(*req)
+        self._validate_request(req, label="submitted request")
+        if not self._run_live.wait(timeout=5.0):
+            raise RuntimeError(
+                "submit() requires a live run() loop — start the engine "
+                "(e.g. through launch.frontend.AsyncFrontend) first")
+        with self._mbox_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._inbox.append((rid, req, None if at is None else float(at)))
+        self._wake.set()
+        return rid
+
+    def cancel(self, rid: int) -> None:
+        """Cancel a request by id; thread-safe, idempotent, best-effort
+        (a request that already finished is left untouched). Queued
+        requests are dropped; a mid-prefill request drops its
+        PrefillScheduler job and grants; an active or preempted one is
+        evicted — shared prefix pages refcount-released, swapped planes
+        discarded without a swap-in. Partial tokens stay in the result."""
+        with self._mbox_lock:
+            self._cancel_box.add(rid)
+        self._wake.set()
+
+    def request_stop(self) -> None:
+        """Ask a `drain=False` (serve-forever) run loop to exit at the
+        next iteration; thread-safe. In-flight requests are abandoned
+        with partial results. Draining runs ignore it."""
+        self._stop_flag = True
+        self._wake.set()
+
+    def reset_stats(self) -> None:
+        """Zero the live run's measurement counters in place — the
+        warmup/measure boundary. After a warmup workload has compiled
+        every program and warmed the PrefixIndex, calling this makes the
+        subsequently reported stats (prefix hits, preemptions, peak
+        pages/swap watermarks, timings, tok/s) reflect only the traffic
+        that follows, instead of inheriting the warmup's. Call it from
+        the engine thread (a trace_hook) or while the loop is idle."""
+        lv = self._live
+        if lv is None:
+            return
+        for k in lv["counters"]:
+            lv["counters"][k] = 0
+        for k in lv["pstats"]:
+            lv["pstats"][k] = 0
+        lv["acc"].update(
+            t_prefill=0.0, t_resume=0.0, decode_steps=0, decode_tokens=0,
+            peak_pages=lv["allocator"].used_count,
+            t0=time.perf_counter())
+        lv["allocator"].reset_peak()
+        lv["swap"].reset_counters()
+        if lv["sched"] is not None:
+            lv["sched"].chunks_run = 0
+
     # ------------------------------------------------------------ public
     def run(self, params, requests: Sequence[Request],
-            progress: bool = False, trace_hook=None
+            progress: bool = False, trace_hook=None, emit=None,
+            clock_mode: str = "step", drain: bool = True
             ) -> Tuple[Dict[int, np.ndarray], dict]:
         """Serve every request to completion; greedy tokens per request.
 
@@ -602,21 +713,54 @@ class ContinuousBatchingEngine:
         there. Page accounting invariants (free-list conservation, no
         double-use, block-table/position consistency) are additionally
         asserted internally every iteration regardless of the hook.
+
+        `emit`, if given, streams tokens: `emit(rid, token, final, t)` is
+        called from the engine thread with each host-int greedy token the
+        moment its step's device fetch lands (`t` = perf_counter stamp;
+        one batched `jax.device_get` per decode step, never per token).
+        Streaming runs skip the device-side history (results come from
+        the emitted host ints), so a serve-forever loop holds no
+        per-token device garbage.
+
+        `clock_mode` selects the arrival clock `Request.arrive_at` is
+        compared against: "step" (default) counts decode steps and
+        fast-forwards over idle gaps — deterministic, for tests and
+        throughput benchmarks; "wall" reads monotonic seconds since run
+        start, and idle waits sleep in real time — the latency-SLO mode.
+
+        `drain=False` (requires "wall") keeps the loop alive when queue
+        and slots are empty, serving `submit()` traffic until
+        `request_stop()` — the asyncio front-end's serve-forever mode.
+        Completion asserts are skipped for requests still in flight at
+        stop; their partial token streams are returned as-is.
         """
-        requests = [r if isinstance(r, Request) else Request(*r)
-                    for r in requests]
+        if clock_mode not in ("step", "wall"):
+            raise ValueError(f"unknown clock_mode {clock_mode!r}")
+        if not drain and clock_mode != "wall":
+            raise ValueError("drain=False (serve-forever) needs "
+                             "clock_mode='wall': a step clock cannot "
+                             "sleep for traffic")
+        try:
+            return self._run_impl(params, requests, progress, trace_hook,
+                                  emit, clock_mode, drain)
+        finally:
+            # a finished (or dead) loop must stop accepting traffic:
+            # late submit()/reset_stats() calls fail fast / no-op instead
+            # of landing in state nobody is serving
+            self._run_live.clear()
+            self._live = None
+
+    def _run_impl(self, params, requests, progress, trace_hook,
+                  emit, clock_mode, drain):
+        wall = clock_mode == "wall"
+        requests = {i: (r if hasattr(r, "tokens") else Request(*r))
+                    for i, r in enumerate(requests)}
         ps, NB = self.page_size, self.n_blocks
         sched = self._sched
         if sched is not None:
             sched.reset()
-        for i, r in enumerate(requests):
-            need = len(r.tokens) + r.gen - 1
-            if need > NB * ps or math.ceil(need / ps) > self.n_pages:
-                raise ValueError(
-                    f"request {i} needs {need} slots "
-                    f"({math.ceil(need / ps)} pages) but the engine serves "
-                    f"at most {NB * ps} slots/sequence from {self.n_pages} "
-                    f"pages — raise max_seq_len/n_pages")
+        for i, r in requests.items():
+            self._validate_request(r, label=f"request {i}")
 
         allocator = paging.PageAllocator(self.n_pages)
         # fresh prefix index per run (the pool is fresh too): non-owning,
@@ -636,12 +780,16 @@ class ContinuousBatchingEngine:
         slots: List[Optional[_Slot]] = [None] * S
         host_bt = np.full((S, NB), -1, np.int64)
         host_pos = np.full((S,), -1, np.int64)
-        # admission order: arrival time, then request index (FIFO)
-        queue = sorted(enumerate(requests),
-                       key=lambda kv: (kv[1].arrive_at, kv[0]))
+        # admission order: arrival time, then request id (FIFO) — a heap,
+        # because submit() pushes mid-run and the idle fast-forward must
+        # always see the *earliest* pending arrival at queue[0]
+        queue = [(float(r.arrive_at), rid, r) for rid, r in requests.items()]
+        heapq.heapify(queue)
+        cancelled: set = set()      # rids cancelled; heap entries lazy-skip
         resume_q: List[_Preempted] = []
         swap = paging.SwapStore()
         first_tok: Dict[int, jnp.ndarray] = {}
+        emitted: Dict[int, List[int]] = {}   # emit mode: host token copies
         history: List[Tuple[tuple, jnp.ndarray]] = []
         # replay-divergence self-checks, verified after the loop in one
         # batched fetch — reading each scalar inline would sync the
@@ -651,24 +799,39 @@ class ContinuousBatchingEngine:
         deferred_checks: List[jnp.ndarray] = []
         deferred_expect: List[Tuple[int, str]] = []
         counters = {"preemptions": 0, "preempt_requeue": 0,
-                    "preempt_swap": 0, "resumes": 0, "replay_steps": 0}
+                    "preempt_swap": 0, "resumes": 0, "replay_steps": 0,
+                    "cancelled": 0}
         join_seq = 0
-        peak_pages = 0
-        t_prefill = 0.0
-        t_resume = 0.0
+        # measurement accumulators live in one dict so reset_stats() can
+        # zero them mid-run (the warmup/measure boundary); n_steps stays
+        # a plain local — it sequences trace snapshots, never stats
+        acc = {"peak_pages": 0, "t_prefill": 0.0, "t_resume": 0.0,
+               "decode_steps": 0, "decode_tokens": 0, "t0": 0.0}
         n_steps = 0                 # decode steps actually executed
-        clock = 0                   # arrival time: n_steps + idle skips
+        clock = 0.0                 # arrival clock: steps (or wall seconds)
+        chunk_credit = 0.0          # fractional prefill chunks banked
         # expose the live scheduling state for post-mortem tests: after a
         # PoolExhausted escapes, page accounting must still be consistent
         self._debug_state = {"allocator": allocator, "slots": slots,
                              "swap": swap, "prefix_index": index}
+        self._live = {"acc": acc, "counters": counters, "pstats": pstats,
+                      "allocator": allocator, "swap": swap, "sched": sched}
+        with self._mbox_lock:
+            self._next_rid = len(requests)
+            self._inbox.clear()
+            self._cancel_box.clear()
+        self._stop_flag = False
 
         # ---------------- preemption machinery (closures over run state)
         def emitted_toks(rid: int) -> List[int]:
             """Host copies of every greedy token rid has emitted, in
             order, across all of its slot residencies — one batched
             device fetch per call (preemptions are rare; per-step
-            fetches would sync the decode pipeline every token)."""
+            fetches would sync the decode pipeline every token). In
+            emit mode the per-step streaming fetch already landed every
+            token on the host, so this is a pure host read."""
+            if emit is not None:
+                return list(emitted[rid])
             out = [int(jax.device_get(first_tok[rid]))]
             hits = [(i, s_h) for i, (act, _) in enumerate(history)
                     for s_h, r in act if r == rid]
@@ -697,6 +860,46 @@ class ContinuousBatchingEngine:
             host_bt[s] = -1
             host_pos[s] = -1
             slots[s] = None
+
+        def drain_mailboxes():
+            """Fold submit()/cancel() traffic into the run state — called
+            once per loop iteration, so everything else in the loop stays
+            single-threaded. Arrivals stamped `at=None` arrive "now" (the
+            current clock); cancellations release whatever the request
+            holds: queue entry (lazy — the rid is skipped at pop), live
+            slot (evicted; shared prefix pages refcount-released),
+            mid-prefill job (PrefillScheduler entry + granted pages
+            dropped), or resume-queue record (swapped planes discarded
+            without charging a swap-in)."""
+            with self._mbox_lock:
+                arrivals, self._inbox = self._inbox, []
+                cxl = self._cancel_box
+                self._cancel_box = set()
+            self._wake.clear()
+            for rid, req, at in arrivals:
+                requests[rid] = req
+                heapq.heappush(
+                    queue, (clock if at is None else float(at), rid, req))
+            for rid in cxl:
+                if rid in cancelled:
+                    continue
+                hit = any(q_rid == rid for _, q_rid, _ in queue)
+                s = next((i for i, st in enumerate(slots)
+                          if st is not None and st.rid == rid), None)
+                if s is not None:
+                    if sched is not None and sched.has(s):
+                        sched.cancel(s)
+                    evict(s)
+                    hit = True
+                rec = next((r for r in resume_q if r.rid == rid), None)
+                if rec is not None:
+                    resume_q.remove(rec)
+                    if rec.swapped:
+                        swap.discard(rid)
+                    hit = True
+                if hit:
+                    cancelled.add(rid)
+                    counters["cancelled"] += 1
 
         def finished_slot() -> Optional[int]:
             return next((s for s, st in enumerate(slots)
@@ -811,8 +1014,8 @@ class ContinuousBatchingEngine:
             """Rebuild a preempted sequence in slot s. Caller guarantees
             the allocator holds enough pages (incl. the growth page when
             pos sits on a block boundary)."""
-            nonlocal caches, t_resume
-            t0 = time.time()
+            nonlocal caches
+            t0 = time.perf_counter()
             counters["resumes"] += 1
             if rec.swapped:
                 nbp = swap.n_pages(rec.rid)
@@ -834,7 +1037,7 @@ class ContinuousBatchingEngine:
                 # rebuilt cache is bit-identical, with no per-length
                 # retrace and no contiguous staging cache.
                 bind_prefilling(s, rec.rid, rec.req, recorded=rec.toks)
-                t_resume += time.time() - t0
+                acc["t_resume"] += time.perf_counter() - t0
                 if progress:
                     print(f"[resume] rid={rec.rid} slot={s} chunked "
                           f"re-prefill queued ({len(rec.toks)} recorded)")
@@ -864,7 +1067,7 @@ class ContinuousBatchingEngine:
                           for c, t_g in zip(caches, tmp)]
             bind_slot(s, rec.rid, rec.req, pages, pos,
                       generated=len(rec.toks), last_tok=rec.toks[-1])
-            t_resume += time.time() - t0
+            acc["t_resume"] += time.perf_counter() - t0
             if progress:
                 print(f"[resume] rid={rec.rid} slot={s} pos={pos} "
                       f"pages={pages}")
@@ -994,18 +1197,36 @@ class ContinuousBatchingEngine:
                         f"slot {s}: next write targets shared page " \
                         f"{int(host_bt[s, blk])}"
 
-        t_run0 = time.time()
+        def q_peek():
+            """Earliest pending (arrive_at, rid, req) by heap order,
+            dropping lazily-cancelled entries; None when empty."""
+            while queue and queue[0][1] in cancelled:
+                heapq.heappop(queue)
+            return queue[0] if queue else None
+
+        def arrived():
+            head = q_peek()
+            return head is not None and head[0] <= clock
+
+        t_run0 = time.perf_counter()
+        acc["t0"] = t_run0
+        self._t_origin = t_run0
+        self._run_live.set()
         while True:
+            if wall:
+                clock = time.perf_counter() - t_run0
+            drain_mailboxes()
             # ---- evict finished sequences: pages back to the free list
+            # (before the stop check: a shutdown right after a final
+            # token must still release that sequence's pages)
             while (fin := finished_slot()) is not None:
                 evict(fin)
+            if self._stop_flag and not drain:
+                break                           # serve-forever shutdown
 
             # ---- resume preempted sequences, then admit new arrivals.
             # Strict resume-before-admit: while a preempted sequence
             # waits, nothing younger is admitted past it.
-            def arrived():
-                return queue and queue[0][1].arrive_at <= clock
-
             while None in slots and (resume_q or arrived()):
                 s = slots.index(None)
                 if resume_q:
@@ -1016,7 +1237,7 @@ class ContinuousBatchingEngine:
                     resume_q.pop(0)
                     resume(s, rec)
                     continue
-                rid, req = queue[0]
+                _, rid, req = q_peek()
                 L = len(req.tokens)
                 nbp = math.ceil(L / ps)
                 # shared-prefix match (chunked + --prefix-cache): blocks
@@ -1037,7 +1258,7 @@ class ContinuousBatchingEngine:
                     if not any(slots):
                         allocator.alloc(nbp_fresh + own)  # PoolExhausted
                     break                       # wait for evictions
-                queue.pop(0)
+                heapq.heappop(queue)
                 if sched is not None:
                     # chunked admission is a host-side bind only: pages
                     # are granted chunk by chunk and the prompt streams
@@ -1084,7 +1305,7 @@ class ContinuousBatchingEngine:
                         print(f"[admit] rid={rid} slot={s} prompt={L} "
                               f"(chunked prefill queued)")
                     continue
-                t0 = time.time()
+                t0 = time.perf_counter()
                 pages = allocator.alloc(nbp)
                 tmp = self.model.init_cache(1, nbp * ps, cache_cfg=self.cc)
                 tok0, tmp = self._prefill(
@@ -1103,17 +1324,29 @@ class ContinuousBatchingEngine:
                 # slots out of t_prefill; the adoption copies themselves
                 # are small and stay with decode_s.
                 jax.block_until_ready(tok0)
-                t_prefill += time.time() - t0
+                acc["t_prefill"] += time.perf_counter() - t0
+                if emit is not None:
+                    tk0 = int(jax.device_get(tok0[0, 0]))
+                    emitted[rid] = [tk0]
+                    emit(rid, tk0, req.gen <= 1, time.perf_counter())
                 if progress:
                     print(f"[admit] rid={rid} slot={s} prompt="
                           f"{len(req.tokens)} pages={pages}")
-            peak_pages = max(peak_pages, allocator.used_count)
+            acc["peak_pages"] = max(acc["peak_pages"], allocator.used_count)
 
-            # ---- chunked prefill: run one fixed-shape chunk of the
-            # packed prompt stream (if any prompts are pending), then
-            # fall through to the decode step — admission cost is
-            # amortized across the decode loop instead of blocking it.
+            # ---- chunked prefill: run fixed-shape chunks of the packed
+            # prompt stream (if any prompts are pending), then fall
+            # through to the decode step — admission cost is amortized
+            # across the decode loop instead of blocking it. The
+            # chunks:steps ratio is metered by `prefill_priority` as a
+            # credit accumulator: each iteration banks that many chunk
+            # credits (capped at max(priority, 1) so idle iterations
+            # cannot stockpile a burst) and each whole credit runs one
+            # chunk. 1.0 keeps the one-chunk-per-step cadence; 2.0 runs
+            # two chunks per decode step (faster TTFT, slower ITL); 0.5
+            # runs one chunk every other step (decode-favouring).
             chunk_ran = False
+            chunk_gated = False
             if sched is not None and sched.pending:
                 def prefill_budget() -> int:
                     """Pages prefill may take right now: the free count
@@ -1132,8 +1365,14 @@ class ContinuousBatchingEngine:
                         slots[slot_want].pages.append(pg)
                         host_bt[slot_want, b] = pg
 
-                plan = sched.plan(prefill_budget, grant, host_bt)
-                if plan is not None:
+                chunk_credit = min(chunk_credit + self.prefill_priority,
+                                   max(self.prefill_priority, 1.0))
+                chunk_gated = chunk_credit < 1.0
+                while chunk_credit >= 1.0 and sched.pending:
+                    plan = sched.plan(prefill_budget, grant, host_bt)
+                    if plan is None:
+                        break
+                    chunk_credit -= 1.0
                     bt_dev = self._replicated(jnp.asarray(host_bt, jnp.int32))
                     caches = [dataclasses.replace(
                         c, block_table=jnp.broadcast_to(
@@ -1145,11 +1384,13 @@ class ContinuousBatchingEngine:
                             spa[s2] = host_pos[s2]
                     for s2, _, _ in plan.completed:
                         spa[s2] = host_pos[s2] + plan.advanced[s2]
-                    t0 = time.time()
+                    t0 = time.perf_counter()
                     am, caches = sched.run(params, caches, plan, spa)
                     jax.block_until_ready(am)
-                    t_prefill += time.time() - t0
+                    acc["t_prefill"] += time.perf_counter() - t0
                     chunk_ran = True
+                    am_np = jax.device_get(am) if emit is not None else None
+                    t_am = time.perf_counter()
                     for s2, n in plan.advanced.items():
                         host_pos[s2] += n
                     for s2, rid2, expect in plan.completed:
@@ -1164,19 +1405,39 @@ class ContinuousBatchingEngine:
                         else:
                             first_tok[rid2] = t_c
                             slots[s2].generated = 1
+                            if emit is not None:
+                                tk0 = int(am_np[s2])
+                                emitted[rid2] = [tk0]
+                                emit(rid2, tk0,
+                                     slots[s2].target <= 1, t_am)
                         tok = tok.at[s2, 0].set(t_c)
                         if index is not None:
                             register_prefix(s2, rid2)
                         if progress:
                             print(f"[prefill] rid={rid2} slot={s2} "
                                   f"complete at pos {host_pos[s2]}")
-                    peak_pages = max(peak_pages, allocator.used_count)
+                    acc["peak_pages"] = max(acc["peak_pages"],
+                                            allocator.used_count)
 
             if not any(slots):
                 if resume_q or arrived():
                     continue                    # a resume/admit now fits
-                if queue:                       # idle until next arrival
-                    clock = queue[0][1].arrive_at
+                head = q_peek()
+                if head is not None:
+                    # idle until the *earliest* pending arrival (the heap
+                    # head) — never past it, so staggered arrivals admit
+                    # in (arrive_at, rid) order even when a later-indexed
+                    # request carries the earlier timestamp
+                    if wall:
+                        self._wake.wait(timeout=max(head[0] - clock, 0.0))
+                    else:
+                        clock = max(clock, head[0])
+                    continue
+                if not drain:
+                    # serve-forever: sleep until traffic or stop. The
+                    # timeout bounds the wait so a stop that raced the
+                    # wake-clear above is still honoured promptly.
+                    self._wake.wait(timeout=0.05)
                     continue
                 break                           # drained
 
@@ -1224,7 +1485,7 @@ class ContinuousBatchingEngine:
                 slots[s].pages.append(pg)
                 host_bt[s, blk] = pg
                 dirty = True
-            peak_pages = max(peak_pages, allocator.used_count)
+            acc["peak_pages"] = max(acc["peak_pages"], allocator.used_count)
             if dirty:
                 bt_dev = self._replicated(jnp.asarray(host_bt, jnp.int32))
                 caches = [dataclasses.replace(
@@ -1251,6 +1512,15 @@ class ContinuousBatchingEngine:
                            and slots[s].generated < slots[s].target
                            and s not in prefilling and s not in replaying)
             if not active and not replaying:
+                if chunk_gated and sched is not None and sched.pending:
+                    # nothing to decode and the only pending work is a
+                    # credit-gated prefill chunk: skipping it would spin
+                    # forever (and the stalled-prefill branch below would
+                    # wrongly preempt). Force a whole credit — priority
+                    # metering trades prefill against *decode* work, and
+                    # there is none to favour.
+                    chunk_credit = 1.0
+                    continue
                 if sched is not None and sched.pending and not chunk_ran:
                     # every live slot is a stalled prefill: no decode
                     # step can run and no chunk could take a page.
@@ -1270,24 +1540,44 @@ class ContinuousBatchingEngine:
             if trace_hook is not None:
                 trace_hook(self._snapshot(
                     n_steps, allocator, slots, host_bt, host_pos, caches,
-                    queue, resume_q, swap, prefilling=prefilling,
+                    [e for e in queue if e[1] not in cancelled],
+                    resume_q, swap, prefilling=prefilling,
                     replaying=replaying,
                     prefix=pstats if index is not None else None))
             pos_dev = caches[0].seq_pos[0]      # [S]; host_pos for active
             tok, caches = self._step(params, tok, caches, pos_dev)
             n_steps += 1
-            clock += 1
-            history.append((active, tok))
+            acc["decode_steps"] += 1
+            acc["decode_tokens"] += len(active)
+            if not wall:
+                clock += 1
+            if emit is None:
+                # batch mode: keep the device token columns alive; the
+                # post-loop assembly fetches them all in one device_get
+                history.append((active, tok))
+                toks_np = None
+            else:
+                # streaming mode: one batched fetch per step (the only
+                # per-step sync), fanned out host-side — no history, so
+                # a serve-forever loop accumulates no device garbage
+                toks_np = jax.device_get(tok)
+            t_step = time.perf_counter()
             for s, _ in active:
                 slots[s].generated += 1
                 host_pos[s] += 1
+            if emit is not None:
+                for s, rid_a in active:
+                    tk = int(toks_np[s, 0])
+                    emitted[rid_a].append(tk)
+                    emit(rid_a, tk,
+                         slots[s].generated >= slots[s].target, t_step)
             for s in replaying:
                 host_pos[s] += 1
                 tok = tok.at[s, 0].set(slots[s].replay.pop(0))
                 counters["replay_steps"] += 1
 
         jax.block_until_ready(tok)
-        t_total = time.time() - t_run0
+        t_total = time.perf_counter() - acc["t0"]
 
         # ---- verify the deferred replay-divergence checks (one fetch)
         if deferred_checks:
@@ -1295,41 +1585,57 @@ class ContinuousBatchingEngine:
             for g, (want, msg) in zip(got.tolist(), deferred_expect):
                 assert g == want, msg
 
-        # ---- assemble per-request token streams (single device fetch)
-        outputs: Dict[int, List[int]] = {
-            rid: [int(jax.device_get(t))] for rid, t in first_tok.items()}
-        if history:
-            toks_np = jax.device_get(
-                jnp.concatenate([t for _, t in history], axis=1))  # [S, n]
-            for i, (active, _) in enumerate(history):
-                for s, rid in active:
-                    outputs[rid].append(int(toks_np[s, i]))
-        results = {rid: np.asarray(t, np.int32)
-                   for rid, t in outputs.items()}
-        for rid, req in enumerate(requests):
-            assert len(results[rid]) == req.gen, (rid, len(results[rid]))
+        # ---- assemble per-request token streams (single device fetch;
+        # a streaming run already holds every token host-side)
+        if emit is not None:
+            results = {rid: np.asarray(t, np.int32)
+                       for rid, t in emitted.items()}
+        else:
+            outputs: Dict[int, List[int]] = {
+                rid: [int(jax.device_get(t))]
+                for rid, t in first_tok.items()}
+            if history:
+                toks_np = jax.device_get(
+                    jnp.concatenate([t for _, t in history], axis=1))
+                for i_h, (act_h, _) in enumerate(history):
+                    for s_h, rid_h in act_h:
+                        outputs[rid_h].append(int(toks_np[s_h, i_h]))
+            results = {rid: np.asarray(t, np.int32)
+                       for rid, t in outputs.items()}
+        if drain:
+            # every non-cancelled request ran to completion (a stopped
+            # serve-forever loop legitimately returns partial streams)
+            for rid, req in requests.items():
+                if rid in cancelled:
+                    continue
+                assert len(results[rid]) == req.gen, \
+                    (rid, len(results[rid]))
 
-        decode_s = max(t_total - t_prefill - t_resume, 1e-9)
-        decode_tokens = sum(len(a) for a, _ in history)
+        decode_s = max(t_total - acc["t_prefill"] - acc["t_resume"], 1e-9)
         pool_slots = self.n_pages * ps
-        total_tokens = sum(len(r.tokens) + r.gen - 1 for r in requests)
+        total_tokens = sum(len(r.tokens) + r.gen - 1
+                           for r in requests.values())
         stats = {
-            "prefill_s": t_prefill,
+            "prefill_s": acc["t_prefill"],
             "prefill_mode": self.prefill_mode,
+            "prefill_priority": self.prefill_priority,
             "prefill_chunks": sched.chunks_run if sched is not None else 0,
             "prefill_compile_count":
                 sched.compile_count if sched is not None else None,
             "run_s": t_total,
-            "resume_s": t_resume,
+            "resume_s": acc["t_resume"],
             "decode_s": decode_s,
-            "decode_steps": n_steps,
-            "decode_tok_s": decode_tokens / decode_s,
+            "decode_steps": acc["decode_steps"],
+            "decode_tok_s": acc["decode_tokens"] / decode_s,
+            "clock_mode": clock_mode,
             "pool_pages": self.n_pages,
             "page_size": ps,
             "pool_slots": pool_slots,
-            "peak_pages_used": peak_pages,
-            "peak_pool_utilization": peak_pages / max(self.n_pages, 1),
+            "peak_pages_used": acc["peak_pages"],
+            "peak_pool_utilization":
+                acc["peak_pages"] / max(self.n_pages, 1),
             "total_tokens_served": total_tokens,
+            "cancelled": counters["cancelled"],
             "preemptions": counters["preemptions"],
             "preempt_requeue": counters["preempt_requeue"],
             "preempt_swap": counters["preempt_swap"],
@@ -1410,6 +1716,26 @@ def main(argv=None):
                     help="prefix cache: minimum whole shared pages an "
                          "admission must match to take the hit path "
                          "(shorter matches prefill from scratch)")
+    ap.add_argument("--prefill-priority", type=float, default=1.0,
+                    help="paged engine, chunked prefill: prefill chunks "
+                         "admitted per decode-loop iteration (fractional "
+                         "< 1 throttles prefill to favor decode ITL; "
+                         "> 1 lets several chunks run back-to-back to "
+                         "favor TTFT)")
+    ap.add_argument("--serve", choices=("sync", "async"), default="sync",
+                    help="sync: one blocking engine.run over the batch; "
+                         "async: the asyncio streaming front-end "
+                         "(launch.frontend) replays a timed arrival "
+                         "trace through a serve-forever engine loop and "
+                         "reports TTFT/ITL percentiles (paged engine "
+                         "only)")
+    ap.add_argument("--arrival-trace", choices=("none", "poisson", "bursty"),
+                    default="none",
+                    help="async serving: arrival process for the replay "
+                         "(none: every request arrives at t=0)")
+    ap.add_argument("--arrival-rate", type=float, default=16.0,
+                    help="async serving: offered load in requests/s for "
+                         "--arrival-trace poisson|bursty")
     ap.add_argument("--preempt", choices=("off", "requeue", "swap", "auto"),
                     default="off",
                     help="paged engine: on decode-time pool exhaustion, "
@@ -1472,6 +1798,12 @@ def main(argv=None):
           f"impl={args.impl} engine={args.engine} batch={args.batch} "
           f"prompt={args.prompt_len} gen={args.gen}")
 
+    if args.serve == "async" and args.engine != "paged":
+        ap.error("--serve async streams from the paged engine's decode "
+                 "loop; add --engine paged")
+    if args.arrival_trace != "none" and args.serve != "async":
+        ap.error("--arrival-trace replays through the async front-end; "
+                 "add --serve async")
     if args.engine == "paged":
         if args.prefix_cache and args.prefill != "chunked":
             ap.error("--prefix-cache relies on the chunked path's "
@@ -1505,9 +1837,31 @@ def main(argv=None):
             chunk_seg=args.chunk_seg or None,
             prefix_cache=args.prefix_cache,
             prefix_min_pages=args.prefix_min_pages,
+            prefill_priority=args.prefill_priority,
             mesh=mesh)
         reqs = [Request(np.asarray(batch["tokens"][b]), args.gen)
                 for b in range(args.batch)]
+        if args.serve == "async":
+            from repro.launch import frontend
+            ats = [0.0] * args.batch if args.arrival_trace == "none" \
+                else frontend.arrival_times(
+                    args.arrival_trace, args.batch, args.arrival_rate,
+                    rng=np.random.default_rng(args.seed))
+            trace = [(r.tokens, r.gen, at) for r, at in zip(reqs, ats)]
+            warm = None if args.no_warmup else [(r.tokens, r.gen)
+                                                for r in reqs]
+            results, slo, stats = frontend.play_trace(
+                engine, params, trace, warmup=warm)
+            stats["slo"] = slo
+            print(f"async {args.arrival_trace or 'none'} trace "
+                  f"({len(trace)} requests): "
+                  f"ttft p50 {slo['ttft']['p50_ms']:.1f} ms / "
+                  f"p99 {slo['ttft']['p99_ms']:.1f} ms | "
+                  f"itl p50 {slo['itl']['p50_ms']:.2f} ms / "
+                  f"p99 {slo['itl']['p99_ms']:.2f} ms | decode "
+                  f"{stats['decode_tok_s']:.1f} tok/s")
+            print("sample:", results[0][:16])
+            return stats
         if not args.no_warmup:
             engine.run(params, reqs)            # compile pass, untimed
         results, stats = engine.run(params, reqs)

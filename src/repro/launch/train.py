@@ -152,11 +152,11 @@ def main(argv=None):
 
         losses = []
         for step in range(start_step, args.steps):
-            t0 = time.time()
+            t0 = time.perf_counter()
             batch = data.global_batch(step)
             params, opt_state, comp_state, metrics = step_fn(
                 params, opt_state, comp_state, batch)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             coord.step_report(jax.process_index(), step, dt)
             losses.append(float(metrics["loss"]))
             if step % args.log_every == 0 or step == args.steps - 1:

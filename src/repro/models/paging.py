@@ -170,6 +170,12 @@ class PageAllocator:
         """Current reference count (0 = free / never allocated)."""
         return self._ref.get(page, 0)
 
+    def reset_peak(self) -> None:
+        """Restart the high watermark at the *current* residency — the
+        warmup/measure boundary (engine.reset_stats): the peak reported
+        afterwards reflects only allocations from now on."""
+        self.peak_used = len(self._ref)
+
     @property
     def refcounts(self) -> Dict[int, int]:
         """Snapshot of page -> refcount (copy; for invariant checks)."""
@@ -893,6 +899,21 @@ class SwapStore:
         entry = self._entries.pop(key)
         self.bytes_in += entry["nbytes"]
         return entry["groups"], entry["pos"]
+
+    def discard(self, key: int) -> int:
+        """Drop a parked entry without restoring it (a cancelled
+        request): the planes are simply forgotten, so no swap-in traffic
+        is charged — `bytes_in` counts bytes that actually crossed back.
+        Returns the bytes released from host residency."""
+        return int(self._entries.pop(key)["nbytes"])
+
+    def reset_counters(self) -> None:
+        """Zero the traffic counters and restart the residency peak at
+        the current footprint — the warmup/measure boundary
+        (engine.reset_stats)."""
+        self.bytes_out = 0
+        self.bytes_in = 0
+        self.peak_bytes = self.resident_bytes
 
 
 # ----------------------------------------------------------------------

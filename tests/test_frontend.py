@@ -1,0 +1,379 @@
+"""Async streaming front-end over the paged engine (launch.frontend).
+
+What is proven here:
+  * streamed tokens are BIT-identical to a synchronous `engine.run`
+    batch over the same requests — int8 (a8w8) and 4-bit 5opt codecs,
+    chunked prefill, prefix cache on, requeue and swap preemption under
+    a tight pool, with arrivals spread over wall time (the engine's
+    exactness contract survives the asyncio/threading path end-to-end);
+  * cancellation conserves pages: mid-prefill cancels drop the
+    PrefillScheduler job and every granted page, mid-decode cancels run
+    the eviction/release path (shared prefix pages refcount-released),
+    both under the scheduler-trace `InvariantChecker` with the pool
+    drained to empty afterwards;
+  * `engine.reset_stats()` draws a clean warmup/measure boundary in a
+    live serve-forever run: counters, prefix stats, and the page-pool
+    peak watermark reflect only the traffic after the reset (regression
+    for warmed-engine benchmark runs inheriting warmup state);
+  * the idle fast-forward admits interleaved arrivals in arrival order
+    (regression: the old fast-forward jumped the clock to the head of
+    the *initial* queue, skipping requests submitted mid-run with
+    earlier arrival times);
+  * a TP=2 engine streams the same tokens (subprocess row reusing the
+    test_tp_serving self-provisioning pattern).
+"""
+import asyncio
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparq import SparqConfig
+from repro.launch import frontend
+from repro.launch.serve import (ContinuousBatchingEngine, Request,
+                                SchedulerPolicy)
+from repro.models.cache import CacheConfig
+
+from test_scheduler import InvariantChecker
+
+KEY = jax.random.PRNGKey(0)
+PS = 4
+MAX_SEQ_LEN = 24
+
+CODECS = {
+    "a8w8": lambda: SparqConfig(enabled=False, signed=True),
+    "5opt": lambda: SparqConfig.opt5(signed=True),
+}
+
+
+def _cc(codec_name: str) -> CacheConfig:
+    return dataclasses.replace(
+        CacheConfig.sparq_cache(CODECS[codec_name](), impl="reference"),
+        attn_bk=PS)
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    from repro.configs.base import get_reduced_config
+    from repro.models.model import Model
+    cfg = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    return model, params
+
+
+def _engine(model, codec_name="5opt", policy_mode="requeue", n_pages=10,
+            mesh=None, **kw):
+    kw.setdefault("prefill", "chunked")
+    if kw["prefill"] == "chunked":
+        kw.setdefault("chunk_size", 16)
+        kw.setdefault("chunk_align", 4)
+        kw.setdefault("chunk_seg", 2)
+        kw.setdefault("prefix_cache", True)
+    return ContinuousBatchingEngine(
+        model, _cc(codec_name), page_size=PS, n_pages=n_pages,
+        max_active=3, max_seq_len=MAX_SEQ_LEN,
+        policy=SchedulerPolicy(preempt=policy_mode, victim="last_joined"),
+        mesh=mesh, **kw)
+
+
+def _shared_trace(model, seed=7):
+    """Shared 2-page preamble + ragged tails + one exact duplicate:
+    prefix hits and CoW happen while requests overlap in wall time."""
+    rng = np.random.default_rng(seed)
+    vocab = model.cfg.vocab_size
+    preamble = rng.integers(0, vocab, (8,))
+    rows = []
+    for i in range(4):
+        tail = rng.integers(0, vocab,
+                            (4 if i == 0 else int(rng.integers(1, 5)),))
+        rows.append((np.concatenate([preamble, tail]),
+                     int(rng.integers(6, 11)), 0.03 * i))
+    rows.append((rows[0][0].copy(), 7, 0.05))   # duplicate of row 0
+    return rows
+
+
+def _drained_pool(eng):
+    """Post-run page accounting: every page back on the free list."""
+    al = eng._debug_state["allocator"]
+    al.assert_consistent()
+    assert al.used_count == 0, "run left pages allocated"
+
+
+# ----------------------------------------------------------------------
+# streamed tokens == synchronous batch tokens
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec_name,policy_mode",
+                         [("a8w8", "requeue"), ("a8w8", "swap"),
+                          ("5opt", "requeue"), ("5opt", "swap")],
+                         ids=["a8w8-requeue", "a8w8-swap",
+                              "5opt-requeue", "5opt-swap"])
+def test_streamed_tokens_match_batch(tiny_lm, codec_name, policy_mode):
+    """play_trace over wall-clock arrivals streams exactly the tokens a
+    synchronous engine.run emits for the same requests: scheduling,
+    arrival jitter, preemption, and the prefix cache never change
+    tokens, and neither may the asyncio/threading path."""
+    model, params = tiny_lm
+    rows = _shared_trace(model)
+    eng = _engine(model, codec_name, policy_mode)
+    oracle, ostats = eng.run(
+        params, [Request(t, g) for t, g, _ in rows])
+    check = InvariantChecker(ps=PS)
+    out, slo, stats = frontend.play_trace(eng, params, rows,
+                                          trace_hook=check)
+    for i in range(len(rows)):
+        np.testing.assert_array_equal(out[i], oracle[i])
+        assert out[i].shape == (rows[i][1],)
+    assert slo["requests"] == len(rows)
+    assert stats["clock_mode"] == "wall"
+    assert stats["cancelled"] == 0
+    # SLO accounting is well-formed: TTFT per request, one ITL sample
+    # per follow-on token
+    assert slo["ttft"]["n"] == len(rows)
+    assert slo["itl"]["n"] == sum(g - 1 for _, g, _ in rows)
+    assert slo["ttft"]["p50_ms"] > 0
+    _drained_pool(eng)
+
+
+def test_stream_events_are_ordered_and_final(tiny_lm):
+    """Every stream carries monotone timestamps and exactly one final
+    event, and the async iterator protocol terminates cleanly."""
+    model, params = tiny_lm
+    rows = _shared_trace(model)[:3]
+    eng = _engine(model)
+
+    async def main():
+        fe = frontend.AsyncFrontend(eng, params)
+        await fe.start()
+        handles = [fe.submit(t, g, at=at) for t, g, at in rows]
+        for h in handles:
+            await h.drain()
+        await fe.stop()
+        return handles
+
+    handles = asyncio.run(main())
+    for h, (_, g, _) in zip(handles, rows):
+        assert len(h.events) == g
+        assert [e.final for e in h.events] == [False] * (g - 1) + [True]
+        ts = [e.t for e in h.events]
+        assert ts == sorted(ts)
+    _drained_pool(eng)
+
+
+# ----------------------------------------------------------------------
+# cancellation maps onto eviction/release and conserves pages
+# ----------------------------------------------------------------------
+
+def test_cancel_mid_prefill_conserves_pages(tiny_lm):
+    """Cancelling a request whose chunked prefill is still streaming
+    drops its PrefillScheduler job and every granted page; other
+    requests are untouched."""
+    model, params = tiny_lm
+    rng = np.random.default_rng(11)
+    vocab = model.cfg.vocab_size
+    # rid 0 decodes from step 0; rid 1's 16-token prompt prefills in
+    # 2-token segments while rid 0 decodes, so the first decode steps
+    # see it mid-prefill
+    reqs = [Request(rng.integers(0, vocab, (4,)), 12, arrive_at=0),
+            Request(rng.integers(0, vocab, (16,)), 8, arrive_at=1)]
+    eng = _engine(model, n_pages=12, chunk_size=4, prefix_cache=False)
+    oracle, _ = eng.run(params, [Request(reqs[0].tokens, reqs[0].gen)])
+
+    check = InvariantChecker(ps=PS)
+    state = {"cancelled_mid_prefill": False}
+
+    def hook(snap):
+        check(snap)
+        pre = snap.get("prefilling", ())
+        if pre and not state["cancelled_mid_prefill"]:
+            state["cancelled_mid_prefill"] = True
+            eng.cancel(1)
+
+    results, stats = eng.run(params, reqs, trace_hook=hook)
+    assert state["cancelled_mid_prefill"], \
+        "setup failed: rid 1 was never observed mid-prefill"
+    assert stats["cancelled"] == 1
+    np.testing.assert_array_equal(results[0], oracle[0])
+    assert 1 not in results
+    _drained_pool(eng)
+
+
+def test_cancel_mid_decode_releases_shared_pages(tiny_lm):
+    """Mid-decode cancellation through the async API: the victim's
+    stream closes with its partial tokens, survivors stream to
+    completion bit-identically, and the victim's pages — including
+    refcounted shared-prefix pages — return to the pool."""
+    import time as _time
+    model, params = tiny_lm
+    rows = _shared_trace(model)
+    victim_i = 4                        # the duplicate: shares pages
+    toks_v, _, at_v = rows[victim_i]
+    rows[victim_i] = (toks_v, 12, at_v)     # long budget: cancel bites
+    eng = _engine(model)
+    oracle, _ = eng.run(params, [Request(t, g) for t, g, _ in rows])
+    check = InvariantChecker(ps=PS)
+
+    def hook(snap):
+        check(snap)
+        # pace the engine so the event loop's cancel deterministically
+        # lands while the victim is still decoding (not a busy-wait:
+        # ~5 ms per step against a ~µs cancel round-trip)
+        _time.sleep(0.005)
+
+    async def main():
+        fe = frontend.AsyncFrontend(eng, params, trace_hook=hook)
+        await fe.start()
+        handles = [fe.submit(t, g, at=at) for t, g, at in rows]
+        victim = handles[victim_i]
+        async for ev in victim:
+            if len(victim.events) >= 2:
+                victim.cancel()
+        for i, h in enumerate(handles):
+            if i != victim_i:
+                await h.drain()
+        _, stats = await fe.stop()
+        return handles, stats
+
+    handles, stats = asyncio.run(main())
+    victim = handles[victim_i]
+    assert victim.cancelled
+    assert stats["cancelled"] == 1
+    assert 2 <= len(victim.events) < rows[victim_i][1]
+    # the tokens it did stream are a prefix of the oracle's
+    np.testing.assert_array_equal(
+        victim.tokens, oracle[victim_i][:len(victim.events)])
+    for i, h in enumerate(handles):
+        if i != victim_i:
+            np.testing.assert_array_equal(h.tokens, oracle[i])
+    assert eng._live is None            # loop exited
+    _drained_pool(eng)
+
+
+def test_cancel_queued_request_never_admits(tiny_lm):
+    """Cancelling a request still waiting in the arrival queue removes
+    it without it ever touching a slot."""
+    model, params = tiny_lm
+    rng = np.random.default_rng(3)
+    vocab = model.cfg.vocab_size
+    reqs = [Request(rng.integers(0, vocab, (4,)), 6, arrive_at=0),
+            Request(rng.integers(0, vocab, (4,)), 6, arrive_at=100)]
+    eng = _engine(model, prefix_cache=False)
+    seen = set()
+
+    def hook(snap):
+        for info in snap["slots"].values():
+            seen.add(info["rid"])
+        eng.cancel(1)                   # idempotent; rid 1 still queued
+
+    results, stats = eng.run(params, reqs, trace_hook=hook)
+    assert stats["cancelled"] == 1
+    assert seen == {0} and 1 not in results
+    _drained_pool(eng)
+
+
+# ----------------------------------------------------------------------
+# reset_stats: the warmup/measure boundary (regression)
+# ----------------------------------------------------------------------
+
+def test_warmup_does_not_pollute_measured_stats(tiny_lm):
+    """A warmed serve-forever run reports only the timed trace: without
+    the reset_stats() boundary the stats would inherit the warmup's
+    prefix hits, decode steps, and the pool-peak watermark (this test
+    fails if play_trace stops calling engine.reset_stats)."""
+    model, params = tiny_lm
+    rng = np.random.default_rng(5)
+    vocab = model.cfg.vocab_size
+    # warmup: 4 concurrent copies of one prompt -> prefix hits, high
+    # concurrent page peak
+    warm_prompt = rng.integers(0, vocab, (8,))
+    warmup = [(warm_prompt, 6) for _ in range(4)]
+    # timed trace: two DISTINCT prompts far apart in wall time -> zero
+    # hits, peak = one resident request
+    rows = [(rng.integers(0, vocab, (8,)), 5, 0.0),
+            (rng.integers(0, vocab, (8,)), 5, 0.8)]
+    eng = _engine(model, n_pages=16)
+    out, slo, stats = frontend.play_trace(eng, params, rows,
+                                          warmup=warmup)
+    # prefix stats: the warmup's hits/misses are erased; the timed rows
+    # are distinct fresh prompts (warmup pages were refcount-released,
+    # so they cannot hit either)
+    assert stats["prefix_hits"] == 0
+    assert stats["prefix_misses"] == 2
+    # pool peak: one request needs ceil((8+5-1)/4)=3 pages; the warmup's
+    # 4 concurrent requests held >= 8. The watermark must be the trace's.
+    assert stats["peak_pages_used"] <= 4, \
+        f"peak {stats['peak_pages_used']} inherited from warmup"
+    # timings/counters restart at the boundary
+    assert stats["cancelled"] == 0
+    assert stats["decode_steps"] <= sum(g for _, g, _ in rows)
+    for i in range(len(rows)):
+        assert out[i].shape == (rows[i][1],)
+    _drained_pool(eng)
+
+
+# ----------------------------------------------------------------------
+# TP=2: streamed tokens match the sync engine on a sharded mesh
+# ----------------------------------------------------------------------
+
+@pytest.mark.skipif(
+    os.environ.get("REPRO_TP_FRONTEND_SUBPROCESS") != "1"
+    and len(jax.devices()) < 2,
+    reason="needs >= 2 devices (see subprocess wrapper below)")
+def test_tp2_streamed_matches_sync():
+    """The async front-end over a TP=2 engine: same threading model, but
+    every decode step now runs a shard_map program over the mesh — the
+    per-step batched device_get and the streamed tokens must be
+    unchanged."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 forced devices")
+    from repro.configs.base import get_reduced_config
+    from repro.launch.mesh import make_tp_mesh
+    from repro.models.model import Model
+    cfg = get_reduced_config("tinyllama-1.1b").replace(
+        dtype=jnp.float32, remat=False, n_heads=16, n_kv_heads=8)
+    model = Model(cfg)
+    params = model.init_params(KEY)
+    rows = _shared_trace(model)[:3]
+    eng = _engine(model, mesh=make_tp_mesh(2))
+    oracle, ostats = eng.run(params, [Request(t, g) for t, g, _ in rows])
+    assert ostats["tp"] == 2
+    out, slo, stats = frontend.play_trace(eng, params, rows)
+    for i in range(len(rows)):
+        np.testing.assert_array_equal(out[i], oracle[i])
+    assert stats["tp"] == 2
+    _drained_pool(eng)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) >= 2,
+    reason="in-process TP frontend test already ran on this mesh")
+@pytest.mark.skipif(
+    os.environ.get("REPRO_TP_FRONTEND_SUBPROCESS") == "1",
+    reason="already inside the forced-device subprocess")
+def test_tp2_frontend_in_forced_device_subprocess():
+    """Single-device runs still cover the TP=2 streaming row: re-spawn
+    pytest on this file with forced CPU devices (the test_tp_serving
+    self-provisioning pattern)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["REPRO_TP_FRONTEND_SUBPROCESS"] = "1"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", os.path.abspath(__file__), "-q",
+         "-p", "no:cacheprovider", "-k", "tp2_streamed_matches_sync"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, \
+        f"TP frontend subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+    assert "1 passed" in proc.stdout, proc.stdout

@@ -581,3 +581,56 @@ def test_failed_step_allocation_releases_pages(tiny_lm):
     assert sorted(owned + list(allocator.free_pages)) == list(range(4)), \
         "pages leaked by the failed step allocation"
     allocator.assert_consistent()
+
+
+# ----------------------------------------------------------------------
+# regression: idle fast-forward vs interleaved mid-run arrivals
+# ----------------------------------------------------------------------
+
+def test_idle_fastforward_admits_interleaved_arrivals(tiny_lm):
+    """Mid-run submissions interleave with the initial arrival schedule:
+    when every slot drains, the clock must fast-forward to the EARLIEST
+    pending arrival (the heap head), not the head of the initial queue
+    — the old list-based fast-forward jumped straight to the
+    initially-scheduled arrival, admitting it ahead of a mid-run
+    submission with an earlier arrival time and silently stretching the
+    earlier request's queueing delay past the later one's."""
+    from repro.launch.serve import (ContinuousBatchingEngine, Request,
+                                    SchedulerPolicy)
+    model, params = tiny_lm
+    rng = np.random.default_rng(13)
+    vocab = model.cfg.vocab_size
+    prompts = [rng.integers(0, vocab, (4,)) for _ in range(3)]
+    eng = ContinuousBatchingEngine(
+        model, _cc(), page_size=PS, n_pages=12, max_active=1,
+        max_seq_len=24,
+        policy=SchedulerPolicy(preempt="requeue", victim="last_joined"))
+    oracle = {}
+    for i, p in enumerate(prompts):
+        out, _ = eng.run(params, [Request(p, 5)])
+        oracle[i] = out[0]
+
+    # rid 0 decodes steps 0-4; rid 1 is scheduled for step 50 up front;
+    # rid 2 is submitted DURING the run for step 10. The idle window
+    # after rid 0 spans both pending arrivals — admission order must be
+    # 0, 2, 1 and the step clock must stop at 10 on the way to 50.
+    reqs = [Request(prompts[0], 5, arrive_at=0),
+            Request(prompts[1], 5, arrive_at=50)]
+    first_seen = {}
+    state = {"submitted": False, "step": 0}
+
+    def hook(snap):
+        if not state["submitted"]:
+            state["submitted"] = True
+            rid = eng.submit(Request(prompts[2], 5), at=10)
+            assert rid == 2, "mid-run rids continue the initial numbering"
+        for info in snap["slots"].values():
+            first_seen.setdefault(info["rid"], state["step"])
+        state["step"] += 1
+
+    results, stats = eng.run(params, reqs, trace_hook=hook)
+    assert set(first_seen) == {0, 1, 2}
+    assert first_seen[0] < first_seen[2] < first_seen[1], \
+        f"admission order violated arrival order: {first_seen}"
+    for rid in range(3):
+        np.testing.assert_array_equal(results[rid], oracle[rid])

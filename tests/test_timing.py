@@ -1,0 +1,46 @@
+"""Clock discipline in timed paths (lint-style source check).
+
+Interval measurements must use `time.perf_counter()` — `time.time()` is
+wall-clock and steps backwards under NTP slew, which turns benchmark
+deltas, TTFT/ITL samples, and the engine's wall arrival clock into
+noise (the scheduler-clock bugfix this pins). Heartbeat timestamps in
+distributed/fault.py use `time.monotonic()` for the same reason (they
+cross method calls, not intervals inside one frame).
+
+This is a source-text check, not an import-time one, so it also catches
+call sites that only run on hardware CI never exercises.
+"""
+import os
+import re
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# every module that measures intervals or stamps arrivals/heartbeats
+TIMED_PATHS = [
+    "src/repro/launch/serve.py",
+    "src/repro/launch/frontend.py",
+    "src/repro/launch/prefill.py",
+    "src/repro/launch/dryrun.py",
+    "src/repro/launch/train.py",
+    "src/repro/distributed/fault.py",
+    "benchmarks/run.py",
+    "benchmarks/common.py",
+]
+
+
+@pytest.mark.parametrize("rel", TIMED_PATHS)
+def test_no_wall_clock_in_timed_paths(rel):
+    src = open(os.path.join(ROOT, rel)).read()
+    hits = [i + 1 for i, line in enumerate(src.splitlines())
+            if re.search(r"\btime\.time\(", line)]
+    assert not hits, (f"{rel} uses time.time() on line(s) {hits}; "
+                      f"use time.perf_counter() (intervals) or "
+                      f"time.monotonic() (cross-call stamps)")
+
+
+def test_timed_paths_exist():
+    """The list above goes stale silently if files move; fail loudly."""
+    for rel in TIMED_PATHS:
+        assert os.path.exists(os.path.join(ROOT, rel)), rel
