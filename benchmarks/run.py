@@ -41,8 +41,13 @@ def _analysis_counters() -> dict:
     return _ANALYSIS_COUNTERS
 
 
-def _dump(out_json: str, blob: dict) -> None:
+def _dump(out_json: str, blob: dict, telemetry=None) -> None:
     blob = dict(blob, compile_cache=_analysis_counters())
+    if telemetry is not None:
+        # registry snapshot (counters/gauges + histogram p50/p99) from
+        # the scenario's last measured engine, next to the numbers the
+        # blob reports — one instrumentation path end to end
+        blob["metrics"] = telemetry.snapshot()
     with open(out_json, "w") as f:
         json.dump(blob, f, indent=2, sort_keys=True)
     print(f"# wrote {out_json}", file=sys.stderr)
@@ -184,7 +189,7 @@ def paged_serving_rows(out_json: str = "BENCH_paged.json",
     assert summed > stats["pool_slots"], "workload must overflow the pool"
     rows += [("tinyllama_reduced_ragged", k, v)
              for k, v in blob["ragged"].items()]
-    _dump(out_json, blob)
+    _dump(out_json, blob, telemetry=engine.telemetry)
     return rows
 
 
@@ -254,7 +259,7 @@ def oversubscribed_serving_rows(out_json: str = "BENCH_preempt.json",
                       blob[tag]["decode_tok_s"]),
                      (cfg_name, "preemptions", stats["preemptions"]),
                      (cfg_name, "swap_bytes_out", stats["swap_bytes_out"])]
-    _dump(out_json, blob)
+    _dump(out_json, blob, telemetry=eng.telemetry)
     return rows
 
 
@@ -595,6 +600,16 @@ def latency_slo_rows(out_json: str = "BENCH_slo.json",
     (play_trace does this), and every cell's streamed tokens are
     asserted bit-identical to a synchronous `engine.run` oracle —
     scheduling moves latency, never tokens.
+
+    The SLO percentiles come from the shared `frontend_ttft_seconds` /
+    `frontend_itl_seconds` histograms in the engine's metrics registry
+    (repro.obs) — the same series the Prometheus exposition reports.
+    Two extra cells exercise the telemetry layer itself: a fully traced
+    Poisson/requeue run whose Prometheus dump and Perfetto trace are
+    written next to the blob (BENCH_slo_metrics.prom /
+    BENCH_slo_trace.json), and an instrumentation-overhead sweep
+    reporting steady decode tok/s with tracing off vs metrics-only vs
+    full span tracing (docs/observability.md).
     """
     import numpy as np
 
@@ -613,7 +628,8 @@ def latency_slo_rows(out_json: str = "BENCH_slo.json",
     traces = {k: frontend.arrival_times(k, n, rate, rng=rng)
               for k in ("poisson", "bursty")}
 
-    def engine(preempt="requeue", prefill="chunked", priority=1.0):
+    def engine(preempt="requeue", prefill="chunked", priority=1.0,
+               telemetry=None, pool=None):
         policy = serve_mod.SchedulerPolicy(preempt=preempt,
                                            victim="last_joined")
         kw = {}
@@ -621,8 +637,9 @@ def latency_slo_rows(out_json: str = "BENCH_slo.json",
             kw = dict(chunk_size=32, chunk_align=8,
                       prefill_priority=priority)
         return serve_mod.ContinuousBatchingEngine(
-            model, cc, page_size=ps, n_pages=n_pages, max_active=S,
-            max_seq_len=80, policy=policy, prefill=prefill, **kw)
+            model, cc, page_size=ps, n_pages=pool or n_pages,
+            max_active=S, max_seq_len=80, policy=policy, prefill=prefill,
+            telemetry=telemetry, **kw)
 
     warm = [(r.tokens, r.gen) for r in reqs]
 
@@ -677,13 +694,67 @@ def latency_slo_rows(out_json: str = "BENCH_slo.json",
         blob["cells"][f"bursty_requeue_prio{pr}"] = cell(
             engine(priority=pr), "bursty", oracle=oracle)
 
+    # fully instrumented cell: the same Poisson/requeue point with span
+    # tracing on — streamed tokens still asserted against the oracle
+    # (instrumentation must never move tokens), and the run's telemetry
+    # is committed next to the blob: a Prometheus exposition that must
+    # re-parse, and a Perfetto-loadable Chrome trace
+    from repro.obs import Telemetry
+    from repro.obs import export as obs_export
+    tel = Telemetry.tracing()
+    blob["cells"]["poisson_requeue_traced"] = cell(
+        engine(telemetry=tel), "poisson", oracle=oracle)
+    prom_path = out_json.replace(".json", "_metrics.prom")
+    trace_path = out_json.replace(".json", "_trace.json")
+    obs_export.write_prometheus(tel.registry, prom_path)
+    obs_export.write_trace(tel.tracer, trace_path)
+    parsed = obs_export.parse_prometheus(open(prom_path).read())
+    assert parsed[("frontend_ttft_seconds_count", "")] == n
+    with open(trace_path) as f:
+        n_events = len(json.load(f)["traceEvents"])
+    blob["trace_artifacts"] = {
+        "prometheus": prom_path, "prometheus_series": len(parsed),
+        "perfetto_trace": trace_path, "trace_events": n_events,
+    }
+    print(f"# wrote {prom_path}", file=sys.stderr)
+    print(f"# wrote {trace_path}", file=sys.stderr)
+
+    # instrumentation overhead: steady decode tok/s on an uncontended
+    # pool (no preemption noise) under the three telemetry levels —
+    # counters only (default), + step-phase histograms, + span tracing.
+    # Best-of-3 measured runs per level; the tracing column is the
+    # full cost of per-iteration stamps, span bookkeeping and per-token
+    # instants on the host loop.
+    levels = {"off": None, "metrics_only": Telemetry.metrics_only(),
+              "tracing": Telemetry.tracing()}
+    blob["instrumentation_overhead"] = {}
+    tok_s = {}
+    for name, lv_tel in levels.items():
+        eng = engine(telemetry=lv_tel, pool=full_pool)
+        eng.run(params, reqs)               # compile pass, untimed
+        best = 0.0
+        for _ in range(3):
+            _, st = eng.run(params, reqs)
+            best = max(best, st["decode_tok_s"])
+        tok_s[name] = best
+        blob["instrumentation_overhead"][name] = {
+            "decode_tok_s": round(best, 2),
+            "vs_off": round(best / max(tok_s["off"], 1e-9), 4),
+        }
+        rows.append((f"tinyllama_reduced_obs_{name}",
+                     "decode_tok_s", round(best, 2)))
+    # egregious-regression tripwire only — machine noise makes a tight
+    # bound flaky in CI; the measured ratio is recorded in the blob
+    assert tok_s["tracing"] >= 0.7 * tok_s["off"], (
+        f"full tracing costs >30% decode throughput: {tok_s}")
+
     for tag, c in blob["cells"].items():
         cfg_name = f"tinyllama_reduced_slo_{tag}"
         rows += [(cfg_name, m, c[m])
                  for m in ("offered_load_req_s", "ttft_p50_ms",
                            "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms",
                            "preemptions")]
-    _dump(out_json, blob)
+    _dump(out_json, blob, telemetry=tel)
     return rows
 
 

@@ -81,6 +81,10 @@ DEFAULT_TARGETS = (
     "src/repro/launch/prefill.py",
     "src/repro/launch/frontend.py",
     "src/repro/models/paging.py",
+    "src/repro/obs/__init__.py",
+    "src/repro/obs/metrics.py",
+    "src/repro/obs/tracing.py",
+    "src/repro/obs/export.py",
 )
 
 ALLOWED_HOST_CALLS = frozenset({

@@ -42,6 +42,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.launch.serve import ContinuousBatchingEngine, Request
+from repro.obs import export as obs_export
+from repro.obs.metrics import summary_ms
 
 # host/device topology for the static analyzer (repro.analysis.host_lint).
 # This module is pure host code — it never imports jax; every device
@@ -51,7 +53,7 @@ __analysis__ = {
     "host_loop": (),
     "device_returning": (),
     "device_params": (),
-    "host_objects": ("engine", "_engine"),
+    "host_objects": ("engine", "_engine", "registry", "reg", "server"),
 }
 
 
@@ -147,6 +149,20 @@ class AsyncFrontend:
         self._error: Optional[BaseException] = None
         self.results: Optional[Dict[int, np.ndarray]] = None
         self.stats: Optional[dict] = None
+        # online latency distributions, observed per streamed token on
+        # the event loop (host stamps from the engine's batched
+        # device_get — no extra sync). The engine's registry reset at
+        # run start / reset_stats() purges warmup observations; these
+        # series handles survive the reset.
+        reg = engine.telemetry.registry
+        self._h_ttft = reg.histogram(
+            "frontend_ttft_seconds",
+            "time to first token vs scheduled arrival",
+            unit="seconds").series()
+        self._h_itl = reg.histogram(
+            "frontend_itl_seconds",
+            "inter-token latency (consecutive stream gaps, pooled)",
+            unit="seconds").series()
 
     # ------------------------------------------------------- lifecycle
     async def start(self) -> None:
@@ -186,6 +202,12 @@ class AsyncFrontend:
             return                          # late token of a cancelled rid
         ev = TokenEvent(token=token, t=t, final=final)
         h.events.append(ev)
+        if len(h.events) == 1:
+            ref = self.t_origin + h.arrive_t if h.arrive_t is not None \
+                else h.submit_t
+            self._h_ttft.observe(t - ref)
+        else:
+            self._h_itl.observe(t - h.events[-2].t)
         h._q.put_nowait(ev)
         if final:
             h._q.put_nowait(None)           # close the iterator
@@ -291,8 +313,9 @@ def slo_summary(streams: Sequence[RequestStream],
 def play_trace(engine: ContinuousBatchingEngine, params,
                trace: Sequence[Tuple[np.ndarray, int, float]], *,
                warmup: Optional[Sequence] = None,
-               trace_hook=None) -> Tuple[Dict[int, np.ndarray],
-                                         dict, dict]:
+               trace_hook=None,
+               metrics_port: Optional[int] = None
+               ) -> Tuple[Dict[int, np.ndarray], dict, dict]:
     """Replay a timed arrival trace through the async front-end.
 
     `trace` rows are (prompt_tokens, gen, at_seconds). Every request is
@@ -305,12 +328,27 @@ def play_trace(engine: ContinuousBatchingEngine, params,
     programs and a warm PrefixIndex stay, counters/timings/watermarks
     restart — so the reported stats and SLOs reflect only the trace.
 
+    `metrics_port` (not None) serves `GET /metrics` from the engine's
+    live registry on 127.0.0.1 for the duration of the replay (0 picks
+    an ephemeral port) — scrapes read host floats only.
+
     Returns ({trace_row_index: streamed int32 tokens}, slo_summary,
     engine stats) — keyed by trace position, so callers can compare
     against a synchronous `engine.run` over the same rows directly.
+    The SLO percentiles are read from the shared
+    `frontend_ttft_seconds` / `frontend_itl_seconds` histograms that
+    the front-end observes online (the registry reset at the warmup
+    boundary guarantees they hold exactly the trace's samples), so the
+    Prometheus exposition and BENCH_slo.json report the same numbers.
     """
     async def _main():
         fe = AsyncFrontend(engine, params, trace_hook=trace_hook)
+        server = None
+        if metrics_port is not None:
+            server = obs_export.MetricsServer(
+                engine.telemetry.registry, port=metrics_port)
+            await server.start()
+            print(f"metrics: http://127.0.0.1:{server.port}/metrics")
         await fe.start()
         if warmup:
             wh = [fe.submit(toks, gen) for toks, gen, *_ in warmup]
@@ -329,9 +367,13 @@ def play_trace(engine: ContinuousBatchingEngine, params,
         for h in handles:
             await h.drain()
         results, stats = await fe.stop()
+        if server is not None:
+            await server.stop()
         return fe, handles, results, stats
 
     fe, handles, results, stats = asyncio.run(_main())
-    slo = slo_summary(handles, fe.t_origin)
+    slo = {"requests": len(handles),
+           "ttft": summary_ms(fe._h_ttft),
+           "itl": summary_ms(fe._h_itl)}
     out = {i: h.tokens for i, h in enumerate(handles)}
     return out, slo, stats

@@ -109,7 +109,8 @@ class PrefillScheduler:
 
     def __init__(self, model, ctx=None, scales_groups=None, *,
                  chunk_size: int = 32, align: int = 8, page_size: int,
-                 n_slots: int, seg: Optional[int] = None, mesh=None):
+                 n_slots: int, seg: Optional[int] = None, mesh=None,
+                 telemetry=None):
         if chunk_size % align:
             raise ValueError(f"chunk_size {chunk_size} must be a multiple "
                              f"of the query-tile alignment {align}")
@@ -136,6 +137,15 @@ class PrefillScheduler:
             jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
         self.jobs: List[_Job] = []          # FIFO
         self.chunks_run = 0
+        # chunk-stream utilization (repro.obs): non-pad fraction of each
+        # chunk's C stream rows — low fill means admission is paying a
+        # whole fixed-shape chunk for a sliver of prompt
+        self._h_fill = None
+        if telemetry is not None:
+            self._h_fill = telemetry.registry.histogram(
+                "prefill_chunk_fill_ratio",
+                "non-pad fraction of each chunk's token stream",
+                buckets=tuple(i / 10 for i in range(1, 11))).series()
         # ONE jitted program serves every chunk: all shapes are fixed by
         # (chunk_size, n_slots, pool geometry), so the jit cache holds a
         # single entry regardless of prompt lengths/join patterns —
@@ -303,6 +313,9 @@ class PrefillScheduler:
             tile_seq=rep(jnp.asarray(plan.tile_seq, jnp.int32)),
             seq_pos_after=rep(jnp.asarray(seq_pos_after, jnp.int32)))
         self.chunks_run += 1
+        if self._h_fill is not None:
+            # plan arrays are host numpy: a pure host-side observation
+            self._h_fill.observe(int((plan.seq_id >= 0).sum()) / self.C)
         return self._chunk(params,
                            rep(jnp.asarray(plan.tokens, jnp.int32)[None]),
                            caches, meta,

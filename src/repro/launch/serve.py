@@ -61,6 +61,7 @@ from repro.models import paging
 from repro.models.cache import CacheConfig
 from repro.models.common import QuantCtx
 from repro.models.model import Model
+from repro.obs import Telemetry
 
 # host/device topology for the static analyzer (repro.analysis.host_lint;
 # see docs/analysis.md). Pure literal — parsed with ast.literal_eval.
@@ -84,7 +85,11 @@ __analysis__ = {
     "device_returning": ("sched.run", "_sched.run"),
     "device_params": (),
     # host scheduling objects — taint never attaches to these names
-    "host_objects": ("sched", "index", "allocator", "swap"),
+    # (tel/reg/sp are the repro.obs telemetry handles: pure host-side
+    # counters and span buffers, never device values — see
+    # docs/observability.md)
+    "host_objects": ("sched", "index", "allocator", "swap",
+                     "tel", "reg", "sp", "telemetry"),
 }
 
 SPARQ_PRESETS = {
@@ -393,7 +398,8 @@ class ContinuousBatchingEngine:
                  prefill: str = "sequential", chunk_size: int = 32,
                  chunk_align: int = 8, chunk_seg: Optional[int] = None,
                  prefix_cache: bool = False, prefix_min_pages: int = 1,
-                 prefill_priority: float = 1.0, mesh=None):
+                 prefill_priority: float = 1.0, mesh=None,
+                 telemetry: Optional[Telemetry] = None):
         if cache_cfg.layout != "sparq":
             raise ValueError("the paged engine stores packed §5.1 pages; "
                              "use --kv-cache sparq")
@@ -460,13 +466,20 @@ class ContinuousBatchingEngine:
         n_layers = sum(count for _, count in model.groups_meta)
         self._page_bytes = int(4 * n_layers * page_size * cfgm.n_kv_heads
                                * cfgm.head_dim)
+        # telemetry: always-on metrics registry (one float add per
+        # event); span tracing and per-step phase histograms only when
+        # the caller attaches them (Telemetry.tracing() /
+        # .metrics_only()). Every stats-dict entry is sourced from this
+        # registry — see docs/observability.md for the catalog.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
         self._sched = None
         if prefill == "chunked":
             from repro.launch.prefill import PrefillScheduler
             self._sched = PrefillScheduler(
                 model, ctx, scales_groups, chunk_size=chunk_size,
                 align=chunk_align, page_size=page_size,
-                n_slots=max_active, seg=chunk_seg, mesh=mesh)
+                n_slots=max_active, seg=chunk_seg, mesh=mesh,
+                telemetry=self.telemetry)
         self.prefix_cache = prefix_cache
         self.prefix_min_pages = max(1, prefix_min_pages)
         # prefix-match granularity: whole pages (only fully-written,
@@ -682,14 +695,13 @@ class ContinuousBatchingEngine:
         lv = self._live
         if lv is None:
             return
-        for k in lv["counters"]:
-            lv["counters"][k] = 0
-        for k in lv["pstats"]:
-            lv["pstats"][k] = 0
-        lv["acc"].update(
-            t_prefill=0.0, t_resume=0.0, decode_steps=0, decode_tokens=0,
-            peak_pages=lv["allocator"].used_count,
-            t0=time.perf_counter())
+        reg = self.telemetry.registry
+        reg.reset()
+        # gauges restart from the *current* occupancy, exactly as the
+        # old acc["peak_pages"] restarted from allocator.used_count
+        reg.gauge("pool_pages_in_use").set(lv["allocator"].used_count)
+        reg.gauge("pool_pages_peak").set(lv["allocator"].used_count)
+        lv["acc"].update(t0=time.perf_counter())
         lv["allocator"].reset_peak()
         lv["swap"].reset_counters()
         if lv["sched"] is not None:
@@ -762,14 +774,94 @@ class ContinuousBatchingEngine:
         for i, r in requests.items():
             self._validate_request(r, label=f"request {i}")
 
+        # ---- telemetry: the registry is the single store for every
+        # scheduling counter and timing this run reports (the stats dict
+        # below is assembled from registry reads). Series handles are
+        # pre-bound here so the hot loop pays one float add per event.
+        # reg.reset() gives each run fresh stats, matching the fresh
+        # pool/scales semantics of run() itself.
+        tel = self.telemetry
+        reg = tel.registry
+        sp = tel.spans
+        reg.reset()
+        c_preempt = reg.counter("engine_preemptions_total",
+                                "sequences preempted, by resolved mode",
+                                labelnames=("mode",))
+        c_pre_req = c_preempt.series(mode="requeue")
+        c_pre_swap = c_preempt.series(mode="swap")
+        c_resumes = reg.counter("engine_resumes_total",
+                                "preempted sequences rebuilt").series()
+        c_replay = reg.counter("engine_replay_steps_total",
+                               "teacher-forced replay decode steps"
+                               ).series()
+        c_cancel = reg.counter("engine_cancelled_total",
+                               "requests cancelled mid-flight").series()
+        c_steps = reg.counter("engine_decode_steps_total",
+                              "jitted decode steps executed").series()
+        c_tokens = reg.counter("engine_decode_tokens_total",
+                               "greedy tokens emitted by decode steps"
+                               ).series()
+        c_chunks = reg.counter("engine_prefill_chunks_total",
+                               "chunked-prefill chunk programs run"
+                               ).series()
+        c_t_prefill = reg.counter("engine_prefill_seconds_total",
+                                  "time admitting prompts (prefill)",
+                                  unit="seconds").series()
+        c_t_resume = reg.counter("engine_resume_seconds_total",
+                                 "time rebuilding preempted sequences",
+                                 unit="seconds").series()
+        c_phit = reg.counter("prefix_cache_hits_total",
+                             "admissions adopting cached prefix pages"
+                             ).series()
+        c_pmiss = reg.counter("prefix_cache_misses_total",
+                              "admissions with no usable cached prefix"
+                              ).series()
+        c_ptok = reg.counter("prefix_cache_hit_tokens_total",
+                             "prompt tokens served from cached pages"
+                             ).series()
+        c_pshared = reg.counter("prefix_cache_shared_pages_total",
+                                "whole pages adopted from the cache"
+                                ).series()
+        c_cow = reg.counter("prefix_cache_cow_copies_total",
+                            "copy-on-write boundary-page duplications"
+                            ).series()
+        c_refuse = reg.counter("engine_swap_refusals_total",
+                               "swap preemptions demoted to requeue "
+                               "(victim held shared pages)").series()
+        g_pages = reg.gauge("pool_pages_in_use",
+                            "pages currently allocated", unit="pages"
+                            ).series()
+        g_peak = reg.gauge("pool_pages_peak",
+                           "high-water allocated pages", unit="pages"
+                           ).series()
+        g_active = reg.gauge("engine_active_slots",
+                             "slots decoding this step").series()
+        g_queued = reg.gauge("engine_queue_depth",
+                             "requests waiting for admission").series()
+        h_phase = reg.histogram("engine_step_phase_seconds",
+                                "scheduler-iteration phase durations",
+                                unit="seconds", labelnames=("phase",))
+        h_retire = h_phase.series(phase="retire")
+        h_admit = h_phase.series(phase="admit")
+        h_prefill = h_phase.series(phase="prefill")
+        h_decode = h_phase.series(phase="decode")
+        timed = tel.step_timing or sp.on
+
+        def prefix_stats():
+            """pstats-shaped dict from registry reads (trace snapshots
+            and the stats assembly below)."""
+            return {"prefix_hits": int(c_phit.value()),
+                    "prefix_misses": int(c_pmiss.value()),
+                    "prefix_hit_tokens": int(c_ptok.value()),
+                    "prefix_shared_pages": int(c_pshared.value()),
+                    "cow_copies": int(c_cow.value()),
+                    "swap_refusals": int(c_refuse.value())}
+
         allocator = paging.PageAllocator(self.n_pages)
         # fresh prefix index per run (the pool is fresh too): non-owning,
         # invalidated page-by-page as refcounts fall to zero
         index = paging.PrefixIndex(self._quantum, ps) \
             if self.prefix_cache else None
-        pstats = {"prefix_hits": 0, "prefix_misses": 0,
-                  "prefix_hit_tokens": 0, "prefix_shared_pages": 0,
-                  "cow_copies": 0, "swap_refusals": 0}
         caches = self._init_stores()
         S = self.max_active
         # under TP, pin params and the token vector replicated over the
@@ -787,7 +879,7 @@ class ContinuousBatchingEngine:
         heapq.heapify(queue)
         cancelled: set = set()      # rids cancelled; heap entries lazy-skip
         resume_q: List[_Preempted] = []
-        swap = paging.SwapStore()
+        swap = paging.SwapStore(registry=reg)
         first_tok: Dict[int, jnp.ndarray] = {}
         emitted: Dict[int, List[int]] = {}   # emit mode: host token copies
         history: List[Tuple[tuple, jnp.ndarray]] = []
@@ -798,15 +890,12 @@ class ContinuousBatchingEngine:
         # the post-loop compare touches no device values.
         deferred_checks: List[jnp.ndarray] = []
         deferred_expect: List[Tuple[int, str]] = []
-        counters = {"preemptions": 0, "preempt_requeue": 0,
-                    "preempt_swap": 0, "resumes": 0, "replay_steps": 0,
-                    "cancelled": 0}
         join_seq = 0
-        # measurement accumulators live in one dict so reset_stats() can
-        # zero them mid-run (the warmup/measure boundary); n_steps stays
-        # a plain local — it sequences trace snapshots, never stats
-        acc = {"peak_pages": 0, "t_prefill": 0.0, "t_resume": 0.0,
-               "decode_steps": 0, "decode_tokens": 0, "t0": 0.0}
+        # every measurement counter lives in the registry (reset_stats
+        # delegates to reg.reset()); only the run-start wall stamp stays
+        # in a plain dict so reset_stats can restamp it mid-run. n_steps
+        # stays a plain local — it sequences trace snapshots, never stats
+        acc = {"t0": 0.0}
         n_steps = 0                 # decode steps actually executed
         clock = 0.0                 # arrival clock: steps (or wall seconds)
         chunk_credit = 0.0          # fractional prefill chunks banked
@@ -814,8 +903,8 @@ class ContinuousBatchingEngine:
         # PoolExhausted escapes, page accounting must still be consistent
         self._debug_state = {"allocator": allocator, "slots": slots,
                              "swap": swap, "prefix_index": index}
-        self._live = {"acc": acc, "counters": counters, "pstats": pstats,
-                      "allocator": allocator, "swap": swap, "sched": sched}
+        self._live = {"acc": acc, "allocator": allocator, "swap": swap,
+                      "sched": sched}
         with self._mbox_lock:
             self._next_rid = len(requests)
             self._inbox.clear()
@@ -880,6 +969,7 @@ class ContinuousBatchingEngine:
                 requests[rid] = req
                 heapq.heappush(
                     queue, (clock if at is None else float(at), rid, req))
+                sp.submitted(rid)
             for rid in cxl:
                 if rid in cancelled:
                     continue
@@ -899,7 +989,8 @@ class ContinuousBatchingEngine:
                     hit = True
                 if hit:
                     cancelled.add(rid)
-                    counters["cancelled"] += 1
+                    c_cancel.inc()
+                    sp.cancelled(rid)
 
         def finished_slot() -> Optional[int]:
             return next((s for s, st in enumerate(slots)
@@ -946,25 +1037,28 @@ class ContinuousBatchingEngine:
                 # and rebuild by re-prefill, which may even re-match the
                 # still-resident shared prefix.
                 mode = "requeue"
-                pstats["swap_refusals"] += 1
+                c_refuse.inc()
             if mid_prefill:
                 sched.cancel(s)
             rec = _Preempted(rid=st.rid, req=requests[st.rid], toks=toks,
                              swapped=mode == "swap")
             if rec.swapped:
+                t_sw0 = time.perf_counter() if sp.on else 0.0
                 pages_dev = jnp.asarray(st.pages, jnp.int32)
                 planes = [self._gather(c, jnp.int32(s), pages_dev)
                           for c in caches]
-                swap.put(st.rid, planes, int(host_pos[s]))
+                nbytes = swap.put(st.rid, planes, int(host_pos[s]))
+                if sp.on:
+                    sp.swap(st.rid, t_sw0, time.perf_counter(), "out",
+                            nbytes)
             caches = [self._evict(c, jnp.int32(s)) for c in caches]
             drop_pages(st.pages)
             host_bt[s] = -1
             host_pos[s] = -1
             slots[s] = None
             resume_q.append(rec)
-            counters["preemptions"] += 1
-            counters["preempt_swap" if rec.swapped
-                     else "preempt_requeue"] += 1
+            (c_pre_swap if rec.swapped else c_pre_req).inc()
+            sp.preempted(st.rid, mode=mode)
             if progress:
                 how = "swap" if rec.swapped else "requeue"
                 print(f"[preempt] rid={st.rid} slot={s} mode={how} "
@@ -1016,7 +1110,7 @@ class ContinuousBatchingEngine:
             pos sits on a block boundary)."""
             nonlocal caches
             t0 = time.perf_counter()
-            counters["resumes"] += 1
+            c_resumes.inc()
             if rec.swapped:
                 nbp = swap.n_pages(rec.rid)
                 pages = allocator.alloc(nbp)
@@ -1037,7 +1131,8 @@ class ContinuousBatchingEngine:
                 # rebuilt cache is bit-identical, with no per-length
                 # retrace and no contiguous staging cache.
                 bind_prefilling(s, rec.rid, rec.req, recorded=rec.toks)
-                acc["t_resume"] += time.perf_counter() - t0
+                c_t_resume.inc(time.perf_counter() - t0)
+                sp.resumed(rec.rid, phase="prefill")
                 if progress:
                     print(f"[resume] rid={rec.rid} slot={s} chunked "
                           f"re-prefill queued ({len(rec.toks)} recorded)")
@@ -1061,13 +1156,18 @@ class ContinuousBatchingEngine:
                     tmp = self._replay(
                         params, jnp.asarray(rec.toks[:-1], jnp.int32)[None],
                         tmp, jnp.int32(L))
-                    counters["replay_steps"] += done - 1
+                    c_replay.inc(done - 1)
                 pages_dev = jnp.asarray(pages, jnp.int32)
                 caches = [self._adopt(c, t_g, jnp.int32(s), pages_dev)
                           for c, t_g in zip(caches, tmp)]
             bind_slot(s, rec.rid, rec.req, pages, pos,
                       generated=len(rec.toks), last_tok=rec.toks[-1])
-            acc["t_resume"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            c_t_resume.inc(t1 - t0)
+            if sp.on:
+                sp.resume_work(rec.rid, t0, t1,
+                               mode="swap" if rec.swapped else "replay")
+                sp.resumed(rec.rid, phase="decode", t=t1)
             if progress:
                 print(f"[resume] rid={rec.rid} slot={s} pos={pos} "
                       f"pages={pages}")
@@ -1211,18 +1311,25 @@ class ContinuousBatchingEngine:
         t_run0 = time.perf_counter()
         acc["t0"] = t_run0
         self._t_origin = t_run0
+        sp.run_begin(t_run0)
+        if sp.on:
+            for rid in sorted(requests):
+                sp.submitted(rid, t_run0)
         self._run_live.set()
         while True:
             if wall:
                 clock = time.perf_counter() - t_run0
+            it_t0 = time.perf_counter() if timed else 0.0
             drain_mailboxes()
             # ---- evict finished sequences: pages back to the free list
             # (before the stop check: a shutdown right after a final
             # token must still release that sequence's pages)
             while (fin := finished_slot()) is not None:
+                sp.finished(slots[fin].rid)
                 evict(fin)
             if self._stop_flag and not drain:
                 break                           # serve-forever shutdown
+            t_admit0 = time.perf_counter() if timed else 0.0
 
             # ---- resume preempted sequences, then admit new arrivals.
             # Strict resume-before-admit: while a preempted sequence
@@ -1279,7 +1386,7 @@ class ContinuousBatchingEngine:
                                 c, jnp.int32(cow_src), jnp.int32(pg))
                                 for c in caches]
                             hit_pages.append(pg)
-                            pstats["cow_copies"] += 1
+                            c_cow.inc()
                         # donor scales must be installed before the tail
                         # chunk runs: the tail carries no first-segment
                         # tokens, so nothing else would calibrate them
@@ -1288,9 +1395,10 @@ class ContinuousBatchingEngine:
                             for c, (k_sc, v_sc) in zip(caches, sc)]
                         bind_prefilling(s, rid, req, start=T,
                                         pages=hit_pages)
-                        pstats["prefix_hits"] += 1
-                        pstats["prefix_hit_tokens"] += T
-                        pstats["prefix_shared_pages"] += len(shared)
+                        c_phit.inc()
+                        c_ptok.inc(T)
+                        c_pshared.inc(len(shared))
+                        sp.admitted(rid, mode="chunked")
                         if progress:
                             print(f"[admit] rid={rid} slot={s} prompt={L} "
                                   f"prefix hit: {T} tokens / "
@@ -1299,13 +1407,15 @@ class ContinuousBatchingEngine:
                                      else ""))
                         continue
                     if index is not None:
-                        pstats["prefix_misses"] += 1
+                        c_pmiss.inc()
                     bind_prefilling(s, rid, req)
+                    sp.admitted(rid, mode="chunked")
                     if progress:
                         print(f"[admit] rid={rid} slot={s} prompt={L} "
                               f"(chunked prefill queued)")
                     continue
                 t0 = time.perf_counter()
+                sp.admitted(rid, t0, mode="sequential")
                 pages = allocator.alloc(nbp)
                 tmp = self.model.init_cache(1, nbp * ps, cache_cfg=self.cc)
                 tok0, tmp = self._prefill(
@@ -1324,7 +1434,9 @@ class ContinuousBatchingEngine:
                 # slots out of t_prefill; the adoption copies themselves
                 # are small and stay with decode_s.
                 jax.block_until_ready(tok0)
-                acc["t_prefill"] += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                c_t_prefill.inc(t1 - t0)
+                sp.first_token(rid, t1)
                 if emit is not None:
                     tk0 = int(jax.device_get(tok0[0, 0]))
                     emitted[rid] = [tk0]
@@ -1332,7 +1444,9 @@ class ContinuousBatchingEngine:
                 if progress:
                     print(f"[admit] rid={rid} slot={s} prompt="
                           f"{len(req.tokens)} pages={pages}")
-            acc["peak_pages"] = max(acc["peak_pages"], allocator.used_count)
+            g_pages.set(allocator.used_count)
+            g_peak.set_max(allocator.used_count)
+            t_prefill0 = time.perf_counter() if timed else 0.0
 
             # ---- chunked prefill: run fixed-shape chunks of the packed
             # prompt stream (if any prompts are pending), then fall
@@ -1387,8 +1501,13 @@ class ContinuousBatchingEngine:
                     t0 = time.perf_counter()
                     am, caches = sched.run(params, caches, plan, spa)
                     jax.block_until_ready(am)
-                    acc["t_prefill"] += time.perf_counter() - t0
+                    t1 = time.perf_counter()
+                    c_t_prefill.inc(t1 - t0)
+                    c_chunks.inc()
                     chunk_ran = True
+                    if sp.on:
+                        for s2, n in plan.advanced.items():
+                            sp.chunk(slots[s2].rid, t0, t1, tokens=n)
                     am_np = jax.device_get(am) if emit is not None else None
                     t_am = time.perf_counter()
                     for s2, n in plan.advanced.items():
@@ -1402,9 +1521,11 @@ class ContinuousBatchingEngine:
                                 "chunked re-prefill diverged from the "
                                 "recorded first token — greedy decode "
                                 "is no longer deterministic"))
+                            sp.decoding(rid2, t_am)
                         else:
                             first_tok[rid2] = t_c
                             slots[s2].generated = 1
+                            sp.first_token(rid2, t_am)
                             if emit is not None:
                                 tk0 = int(am_np[s2])
                                 emitted[rid2] = [tk0]
@@ -1416,8 +1537,8 @@ class ContinuousBatchingEngine:
                         if progress:
                             print(f"[prefill] rid={rid2} slot={s2} "
                                   f"complete at pos {host_pos[s2]}")
-                    acc["peak_pages"] = max(acc["peak_pages"],
-                                            allocator.used_count)
+                    g_pages.set(allocator.used_count)
+                    g_peak.set_max(allocator.used_count)
 
             if not any(slots):
                 if resume_q or arrived():
@@ -1440,6 +1561,7 @@ class ContinuousBatchingEngine:
                     self._wake.wait(timeout=0.05)
                     continue
                 break                           # drained
+            t_decode0 = time.perf_counter() if timed else 0.0
 
             # ---- allocate the page the next token will be written into
             # (finished slots were evicted above and never reach here).
@@ -1466,6 +1588,7 @@ class ContinuousBatchingEngine:
                     # liveness guarantee, not an optimization.)
                     fin = finished_slot()
                     if fin is not None:
+                        sp.finished(slots[fin].rid)
                         evict(fin)
                         dirty = True
                         continue
@@ -1485,7 +1608,8 @@ class ContinuousBatchingEngine:
                 slots[s].pages.append(pg)
                 host_bt[s, blk] = pg
                 dirty = True
-            acc["peak_pages"] = max(acc["peak_pages"], allocator.used_count)
+            g_pages.set(allocator.used_count)
+            g_peak.set_max(allocator.used_count)
             if dirty:
                 bt_dev = self._replicated(jnp.asarray(host_bt, jnp.int32))
                 caches = [dataclasses.replace(
@@ -1537,18 +1661,28 @@ class ContinuousBatchingEngine:
                             f"requeue|swap")
                     preempt(victim)
                 continue                        # every slot done: evict
-            if trace_hook is not None:
-                trace_hook(self._snapshot(
+            if trace_hook is not None or sp.on:
+                snap = self._snapshot(
                     n_steps, allocator, slots, host_bt, host_pos, caches,
                     [e for e in queue if e[1] not in cancelled],
                     resume_q, swap, prefilling=prefilling,
                     replaying=replaying,
-                    prefix=pstats if index is not None else None))
+                    prefix=prefix_stats() if index is not None else None)
+                if trace_hook is not None:
+                    trace_hook(snap)
+                # the tracer's counter tracks ride the same snapshot
+                # point (pool occupancy + load, rendered as Perfetto
+                # counter lanes)
+                sp.snapshot({"pages_in_use": allocator.used_count,
+                             "free_pages": allocator.free_count,
+                             "active": len(active),
+                             "queued": len(snap["queued"]),
+                             "swapped": len(snap["swapped_rids"])})
             pos_dev = caches[0].seq_pos[0]      # [S]; host_pos for active
             tok, caches = self._step(params, tok, caches, pos_dev)
             n_steps += 1
-            acc["decode_steps"] += 1
-            acc["decode_tokens"] += len(active)
+            c_steps.inc()
+            c_tokens.inc(len(active))
             if not wall:
                 clock += 1
             if emit is None:
@@ -1574,10 +1708,32 @@ class ContinuousBatchingEngine:
             for s in replaying:
                 host_pos[s] += 1
                 tok = tok.at[s, 0].set(slots[s].replay.pop(0))
-                counters["replay_steps"] += 1
+                c_replay.inc()
+            if sp.on and emit is not None:
+                # per-token instants ride the streaming path's existing
+                # host stamp (one batched device_get per step — reading
+                # token values for batch-mode instants would add a sync)
+                for _, rid_a in active:
+                    sp.token(rid_a, t_step)
+            if timed:
+                t_it1 = time.perf_counter()
+                g_active.set(len(active))
+                g_queued.set(sum(1 for e in queue
+                                 if e[1] not in cancelled))
+                h_retire.observe(t_admit0 - it_t0)
+                h_admit.observe(t_prefill0 - t_admit0)
+                h_prefill.observe(t_decode0 - t_prefill0)
+                h_decode.observe(t_it1 - t_decode0)
+                sp.step(it_t0, t_it1,
+                        phases=(("retire", it_t0, t_admit0),
+                                ("admit", t_admit0, t_prefill0),
+                                ("prefill", t_prefill0, t_decode0),
+                                ("decode", t_decode0, t_it1)),
+                        active=len(active))
 
         jax.block_until_ready(tok)
         t_total = time.perf_counter() - acc["t0"]
+        sp.run_end()
 
         # ---- verify the deferred replay-divergence checks (one fetch)
         if deferred_checks:
@@ -1611,39 +1767,48 @@ class ContinuousBatchingEngine:
                 assert len(results[rid]) == req.gen, \
                     (rid, len(results[rid]))
 
-        decode_s = max(t_total - acc["t_prefill"] - acc["t_resume"], 1e-9)
+        # every stats entry below is a registry read (or a pure config
+        # echo) — the back-compat parity test in tests/test_obs.py
+        # asserts this key set and value equality against the registry
+        prefill_s = c_t_prefill.value()
+        resume_s = c_t_resume.value()
+        decode_s = max(t_total - prefill_s - resume_s, 1e-9)
         pool_slots = self.n_pages * ps
         total_tokens = sum(len(r.tokens) + r.gen - 1
                            for r in requests.values())
+        pstats = prefix_stats()
+        c_swap_bytes = reg.counter("swap_bytes_total",
+                                   labelnames=("dir",))
         stats = {
-            "prefill_s": acc["t_prefill"],
+            "prefill_s": prefill_s,
             "prefill_mode": self.prefill_mode,
             "prefill_priority": self.prefill_priority,
-            "prefill_chunks": sched.chunks_run if sched is not None else 0,
+            "prefill_chunks": int(c_chunks.value()),
             "prefill_compile_count":
                 sched.compile_count if sched is not None else None,
             "run_s": t_total,
-            "resume_s": acc["t_resume"],
+            "resume_s": resume_s,
             "decode_s": decode_s,
-            "decode_steps": acc["decode_steps"],
-            "decode_tok_s": acc["decode_tokens"] / decode_s,
+            "decode_steps": int(c_steps.value()),
+            "decode_tok_s": c_tokens.value() / decode_s,
             "clock_mode": clock_mode,
             "pool_pages": self.n_pages,
             "page_size": ps,
             "pool_slots": pool_slots,
-            "peak_pages_used": acc["peak_pages"],
+            "peak_pages_used": int(g_peak.value()),
             "peak_pool_utilization":
-                acc["peak_pages"] / max(self.n_pages, 1),
+                g_peak.value() / max(self.n_pages, 1),
             "total_tokens_served": total_tokens,
-            "cancelled": counters["cancelled"],
-            "preemptions": counters["preemptions"],
-            "preempt_requeue": counters["preempt_requeue"],
-            "preempt_swap": counters["preempt_swap"],
-            "resumes": counters["resumes"],
-            "replay_steps": counters["replay_steps"],
-            "swap_bytes_out": swap.bytes_out,
-            "swap_bytes_in": swap.bytes_in,
-            "swap_peak_bytes": swap.peak_bytes,
+            "cancelled": int(c_cancel.value()),
+            "preemptions": int(c_pre_req.value() + c_pre_swap.value()),
+            "preempt_requeue": int(c_pre_req.value()),
+            "preempt_swap": int(c_pre_swap.value()),
+            "resumes": int(c_resumes.value()),
+            "replay_steps": int(c_replay.value()),
+            "swap_bytes_out": int(c_swap_bytes.value(dir="out")),
+            "swap_bytes_in": int(c_swap_bytes.value(dir="in")),
+            "swap_peak_bytes":
+                int(reg.gauge("swap_peak_bytes").value()),
             "prefix_cache": self.prefix_cache,
             "prefix_hits": pstats["prefix_hits"],
             "prefix_misses": pstats["prefix_misses"],
@@ -1761,6 +1926,19 @@ def main(argv=None):
                          "batch's uncontended working set (forces "
                          "preemption; requires --preempt requeue|swap, "
                          "overrides --n-pages)")
+    ap.add_argument("--metrics-dump", metavar="PATH", default=None,
+                    help="paged engine: write the telemetry registry as "
+                         "a Prometheus text-exposition dump after the "
+                         "run (docs/observability.md)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="paged engine: enable full span tracing and "
+                         "write Chrome trace-event JSON after the run "
+                         "(load in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="async serving: serve GET /metrics (Prometheus "
+                         "text exposition) from the event loop on this "
+                         "port while the trace plays (0 = ephemeral)")
     ap.add_argument("--calibrate", type=int, default=2,
                     help="calibration batches (0 = dynamic scales)")
     ap.add_argument("--prequantize", action="store_true",
@@ -1801,6 +1979,13 @@ def main(argv=None):
     if args.serve == "async" and args.engine != "paged":
         ap.error("--serve async streams from the paged engine's decode "
                  "loop; add --engine paged")
+    if (args.metrics_dump or args.trace_out or args.metrics_port
+            is not None) and args.engine != "paged":
+        ap.error("--metrics-dump/--trace-out/--metrics-port read the "
+                 "paged engine's telemetry registry; add --engine paged")
+    if args.metrics_port is not None and args.serve != "async":
+        ap.error("--metrics-port scrapes from the asyncio front-end; "
+                 "add --serve async")
     if args.arrival_trace != "none" and args.serve != "async":
         ap.error("--arrival-trace replays through the async front-end; "
                  "add --serve async")
@@ -1827,6 +2012,7 @@ def main(argv=None):
         if args.tp > 1:
             from repro.launch.mesh import make_tp_mesh
             mesh = make_tp_mesh(args.tp)
+        telemetry = Telemetry.tracing() if args.trace_out else Telemetry()
         engine = ContinuousBatchingEngine(
             model, cache_cfg, ctx, scales,
             page_size=args.page_size, n_pages=n_pages,
@@ -1838,7 +2024,20 @@ def main(argv=None):
             prefix_cache=args.prefix_cache,
             prefix_min_pages=args.prefix_min_pages,
             prefill_priority=args.prefill_priority,
-            mesh=mesh)
+            mesh=mesh, telemetry=telemetry)
+
+        def dump_telemetry():
+            from repro.obs import export as obs_export
+            if args.metrics_dump:
+                obs_export.write_prometheus(engine.telemetry.registry,
+                                            args.metrics_dump)
+                print(f"metrics dump: {args.metrics_dump}")
+            if args.trace_out:
+                obs_export.write_trace(engine.telemetry.tracer,
+                                       args.trace_out)
+                print(f"trace (Perfetto/chrome://tracing): "
+                      f"{args.trace_out}")
+
         reqs = [Request(np.asarray(batch["tokens"][b]), args.gen)
                 for b in range(args.batch)]
         if args.serve == "async":
@@ -1851,8 +2050,10 @@ def main(argv=None):
             warm = None if args.no_warmup else [(r.tokens, r.gen)
                                                 for r in reqs]
             results, slo, stats = frontend.play_trace(
-                engine, params, trace, warmup=warm)
+                engine, params, trace, warmup=warm,
+                metrics_port=args.metrics_port)
             stats["slo"] = slo
+            dump_telemetry()
             print(f"async {args.arrival_trace or 'none'} trace "
                   f"({len(trace)} requests): "
                   f"ttft p50 {slo['ttft']['p50_ms']:.1f} ms / "
@@ -1865,6 +2066,7 @@ def main(argv=None):
         if not args.no_warmup:
             engine.run(params, reqs)            # compile pass, untimed
         results, stats = engine.run(params, reqs)
+        dump_telemetry()
         print(f"prefill {stats['prefill_s']*1e3:.0f} ms | decode "
               f"{stats['decode_tok_s']:.1f} tok/s | pool "
               f"{stats['peak_pages_used']}/{stats['pool_pages']} pages "

@@ -71,6 +71,8 @@ __analysis__ = {
     "host_loop": ("SwapStore.put", "SwapStore._to_host", "SwapStore.pop"),
     "device_returning": (),
     "device_params": ("SwapStore.put.groups", "SwapStore._to_host.groups"),
+    # repro.obs metric handles: host-side floats only
+    "host_objects": ("registry",),
 }
 
 
@@ -851,11 +853,31 @@ class SwapStore:
     residency so schedulers and benchmarks can report it.
     """
 
-    def __init__(self):
+    def __init__(self, registry=None):
+        """`registry`, when given, is a repro.obs MetricsRegistry the
+        byte counters mirror into (`swap_bytes_total{dir=out|in}`,
+        `swap_resident_bytes` / `swap_peak_bytes` gauges). The plain
+        attributes below stay authoritative; the engine's reset_stats
+        pairs registry.reset() with reset_counters() so the two views
+        never diverge."""
         self._entries: Dict[int, dict] = {}
         self.bytes_out = 0          # cumulative device -> host
         self.bytes_in = 0           # cumulative host -> device
         self.peak_bytes = 0         # peak host residency
+        self._c_out = self._c_in = None
+        self._g_res = self._g_peak = None
+        if registry is not None:
+            c = registry.counter("swap_bytes_total",
+                                 "packed swap traffic by direction",
+                                 unit="bytes", labelnames=("dir",))
+            self._c_out = c.series(dir="out")
+            self._c_in = c.series(dir="in")
+            self._g_res = registry.gauge(
+                "swap_resident_bytes",
+                "packed bytes parked host-side", unit="bytes").series()
+            self._g_peak = registry.gauge(
+                "swap_peak_bytes",
+                "peak host-side swap residency", unit="bytes").series()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -885,6 +907,10 @@ class SwapStore:
                               "nbytes": nbytes}
         self.bytes_out += nbytes
         self.peak_bytes = max(self.peak_bytes, self.resident_bytes)
+        if self._c_out is not None:
+            self._c_out.inc(nbytes)
+            self._g_res.set(self.resident_bytes)
+            self._g_peak.set_max(self.peak_bytes)
         return nbytes
 
     def pos(self, key: int) -> int:
@@ -898,6 +924,9 @@ class SwapStore:
         pos) and drops the entry."""
         entry = self._entries.pop(key)
         self.bytes_in += entry["nbytes"]
+        if self._c_in is not None:
+            self._c_in.inc(entry["nbytes"])
+            self._g_res.set(self.resident_bytes)
         return entry["groups"], entry["pos"]
 
     def discard(self, key: int) -> int:
@@ -905,7 +934,10 @@ class SwapStore:
         request): the planes are simply forgotten, so no swap-in traffic
         is charged — `bytes_in` counts bytes that actually crossed back.
         Returns the bytes released from host residency."""
-        return int(self._entries.pop(key)["nbytes"])
+        nbytes = int(self._entries.pop(key)["nbytes"])
+        if self._g_res is not None:
+            self._g_res.set(self.resident_bytes)
+        return nbytes
 
     def reset_counters(self) -> None:
         """Zero the traffic counters and restart the residency peak at
@@ -914,6 +946,9 @@ class SwapStore:
         self.bytes_out = 0
         self.bytes_in = 0
         self.peak_bytes = self.resident_bytes
+        if self._g_res is not None:
+            self._g_res.set(self.resident_bytes)
+            self._g_peak.set(self.peak_bytes)
 
 
 # ----------------------------------------------------------------------

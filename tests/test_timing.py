@@ -25,6 +25,10 @@ TIMED_PATHS = [
     "src/repro/launch/dryrun.py",
     "src/repro/launch/train.py",
     "src/repro/distributed/fault.py",
+    "src/repro/obs/__init__.py",
+    "src/repro/obs/metrics.py",
+    "src/repro/obs/tracing.py",
+    "src/repro/obs/export.py",
     "benchmarks/run.py",
     "benchmarks/common.py",
 ]
